@@ -1,0 +1,11 @@
+//! §8.2.1 ablation: store-queue size sensitivity on the deep-pipeline,
+//! high-mis-speculation graph kernels (paper: mis-speculated stores can
+//! fill the LSQ and stall later loads; larger store queues recover).
+
+use dae_spec::coordinator::report;
+
+fn main() {
+    report::lsq_sweep("bfs", 2026, &[2, 4, 8, 16, 32, 64]).unwrap();
+    report::lsq_sweep("bc", 2026, &[2, 4, 8, 16, 32, 64]).unwrap();
+    report::lsq_sweep("hist", 2026, &[2, 4, 8, 16, 32, 64]).unwrap();
+}

@@ -1,0 +1,32 @@
+//! §5.3 ablation: poison-block merging on/off across the nested-if
+//! template — how many blocks the merge pass recovers.
+
+use dae_spec::analysis::{DomTree, LodAnalysis, LoopInfo, Reachability};
+use dae_spec::transform::{decouple, hoist_speculative_requests, merge_poison, place_poisons};
+use dae_spec::workloads::nested::nested;
+
+fn main() {
+    println!("== §5.3 ablation: poison-block merging (nested template) ==");
+    println!("{:<8}{:>14}{:>12}{:>12}", "levels", "blocks (raw)", "merged", "final");
+    for levels in 1..=8 {
+        let w = nested(levels, 2026);
+        let f = &w.module.funcs[0];
+        let lod = LodAnalysis::new(&w.module, f);
+        let dom = DomTree::new(f);
+        let loops = LoopInfo::new(f, &dom);
+        let reach = Reachability::new(f, &dom);
+        let mut p = decouple(&w.module, f, false);
+        let hr = hoist_speculative_requests(&mut p, &lod, &dom, &loops, &reach);
+        let stats = place_poisons(&mut p, &hr.map).unwrap();
+        let cu = p.cu;
+        let merged = merge_poison::run(&mut p.module.funcs[cu]);
+        println!(
+            "{:<8}{:>14}{:>12}{:>12}",
+            levels,
+            stats.poison_blocks,
+            merged,
+            stats.poison_blocks - merged
+        );
+    }
+    println!("(paper mm: two poison blocks merged into one)");
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Figure 2: pipeline timelines of decoupled vs
+//! non-decoupled address generation.
+
+use dae_spec::coordinator::report;
+
+fn main() {
+    report::fig2(2026).unwrap();
+}

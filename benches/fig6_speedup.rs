@@ -1,0 +1,8 @@
+//! Regenerates paper Figure 6: DAE/SPEC/ORACLE speedups over STA with
+//! harmonic means (paper headline: SPEC avg 1.9×, up to 3×).
+
+use dae_spec::coordinator::report;
+
+fn main() {
+    report::fig6(2026).unwrap();
+}

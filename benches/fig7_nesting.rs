@@ -1,0 +1,9 @@
+//! Regenerates paper Figure 7: SPEC-over-ORACLE area and performance
+//! overhead as nested control flow grows poison blocks (1..8 levels;
+//! poison calls grow as n(n+1)/2).
+
+use dae_spec::coordinator::report;
+
+fn main() {
+    report::fig7(2026).unwrap();
+}

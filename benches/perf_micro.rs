@@ -1,0 +1,32 @@
+//! L3 microbenchmarks for the §Perf pass: compiler pipeline latency and
+//! simulator throughput (dynamic instructions / second).
+
+use dae_spec::sim::machine::simulate;
+use dae_spec::sim::MachineConfig;
+use dae_spec::transform::{build, Arch};
+use dae_spec::util::Bench;
+
+fn main() {
+    let b = Bench::new(2, 10);
+    // compiler pipeline: all 9 kernels × SPEC
+    b.run("compile SPEC × 9 kernels", || {
+        for name in dae_spec::workloads::PAPER_KERNELS {
+            let w = dae_spec::workloads::build(name, 1, None).unwrap();
+            std::hint::black_box(build(&w.module, 0, Arch::Spec).unwrap());
+        }
+    });
+    // simulator throughput on the largest kernel
+    let w = dae_spec::workloads::build("sssp", 1, None).unwrap();
+    let spec = build(&w.module, 0, Arch::Spec).unwrap();
+    let cfg = MachineConfig::default();
+    let stats = b.run("simulate sssp SPEC (full run)", || {
+        simulate(&spec, &w.args, w.memory.clone(), &cfg).unwrap()
+    });
+    let sim = simulate(&spec, &w.args, w.memory.clone(), &cfg).unwrap();
+    let dyn_i = sim.dyn_instrs as f64;
+    println!(
+        "simulator throughput: {:.1} M dyn-instrs/s  ({} instrs / run)",
+        dyn_i / stats.min_ns * 1000.0,
+        sim.dyn_instrs
+    );
+}

@@ -1,0 +1,20 @@
+//! Regenerates paper Table 1 (absolute cycles + area, poison counts,
+//! mis-speculation rates for STA/DAE/SPEC/ORACLE × 9 kernels) and times
+//! the full suite run.
+
+use dae_spec::coordinator::report;
+use dae_spec::util::Bench;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    report::table1(2026).unwrap();
+    println!("\n[table1 wall time: {:.2?}]", t0.elapsed());
+
+    // compile+simulate throughput for one representative kernel
+    let b = Bench::new(1, 5);
+    b.run("compile+sim hist × 4 archs", || {
+        let cfg = dae_spec::sim::MachineConfig::default();
+        dae_spec::coordinator::run_kernel("hist", 1, None, &dae_spec::transform::Arch::ALL, &cfg, false)
+            .unwrap()
+    });
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Table 2: SPEC cycles as the mis-speculation rate is
+//! swept 0..100% on hist/thr/mm — the "no mis-speculation cost" claim.
+
+use dae_spec::coordinator::report;
+
+fn main() {
+    report::table2(2026).unwrap();
+}

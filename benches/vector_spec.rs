@@ -1,0 +1,40 @@
+//! §10 (future work, implemented here): vectorised speculation
+//! throughput via the AOT-compiled XLA step function vs the scalar loop.
+//! Requires `make artifacts`.
+
+use dae_spec::runtime::{PjrtRuntime, VectorSpecEngine};
+use dae_spec::util::{Bench, Rng};
+use dae_spec::workloads::kernels::HIST_CAP;
+
+fn main() {
+    let Some(_) = dae_spec::runtime::artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut rng = Rng::new(7);
+    let n = 64 * 1024;
+    let d: Vec<i64> = (0..n).map(|_| rng.below(256) as i64).collect();
+    let h0: Vec<i64> = (0..256).map(|b| if b < 32 { HIST_CAP } else { 0 }).collect();
+
+    let b = Bench::new(2, 8);
+    b.run("scalar hist (guarded update loop)", || {
+        let mut h = h0.clone();
+        for &v in &d {
+            if h[v as usize] < HIST_CAP {
+                h[v as usize] += 1;
+            }
+        }
+        h
+    });
+    let mut eng = VectorSpecEngine::new(&rt, "hist_step", 256).unwrap();
+    b.run("vector-speculated hist (XLA batch=256)", || {
+        let mut h = h0.clone();
+        eng.run_hist(&mut h, &d, HIST_CAP).unwrap();
+        h
+    });
+    println!(
+        "lanes={} masked(poisoned)={} conflicts(replayed)={} batches={}",
+        eng.stats.lanes, eng.stats.masked_lanes, eng.stats.conflict_lanes, eng.stats.batches
+    );
+}

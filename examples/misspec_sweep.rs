@@ -1,0 +1,30 @@
+//! Mis-speculation cost sweep (paper Table 2 as an API example): drive
+//! the data-generator knob from 0% to 100% and show SPEC cycles are flat
+//! — poisoned stores cost nothing (§8.2.1).
+//!
+//!     cargo run --release --example misspec_sweep
+
+use dae_spec::coordinator::runner::run_kernel;
+use dae_spec::sim::MachineConfig;
+use dae_spec::transform::Arch;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = MachineConfig::default();
+    for kernel in ["hist", "thr", "mm"] {
+        println!("== {kernel} ==");
+        println!("{:>10}{:>14}{:>14}", "rate", "SPEC cycles", "measured");
+        for pct in [0, 20, 40, 60, 80, 100] {
+            let rate = pct as f64 / 100.0;
+            let row = run_kernel(kernel, 7, Some(rate), &[Arch::Spec], &cfg, true)?;
+            println!(
+                "{:>9}%{:>14}{:>13.0}%",
+                pct,
+                row.cycles[&Arch::Spec],
+                row.misspec_rate * 100.0
+            );
+        }
+        println!();
+    }
+    println!("(flat columns = no mis-speculation penalty, the paper's Table 2 claim)");
+    Ok(())
+}

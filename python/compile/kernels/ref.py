@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the vectorised-speculation step kernels (L1).
+
+These are the golden semantics the Pallas kernels in `spec_mask.py` are
+checked against by pytest/hypothesis. Shapes follow the paper's §10
+future-work sketch: a vector of speculative requests produces per-lane
+store values plus a *store mask* (the vector poison bit).
+"""
+
+import jax.numpy as jnp
+
+HIST_CAP = 1 << 20
+THR_T = 300
+SPMV_CAP = 1 << 30
+
+
+def hist_step_ref(h, idx):
+    """Guarded histogram update: values = H[idx] + 1, mask = H[idx] < CAP.
+
+    `idx` must be pre-clamped (the Rust DU clamps speculative addresses).
+    """
+    gathered = h[idx]
+    vals = gathered + 1
+    mask = (gathered < HIST_CAP).astype(jnp.int64)
+    return vals, mask
+
+
+def thr_step_ref(r, g, b):
+    """Store mask for the RGB threshold kernel: sum > T."""
+    mask = ((r + g + b) > THR_T).astype(jnp.int64)
+    return (mask,)
+
+
+def spmv_step_ref(y, cols, prods):
+    """Saturating scatter-accumulate step."""
+    gathered = y[cols]
+    vals = gathered + prods
+    mask = (gathered < SPMV_CAP).astype(jnp.int64)
+    return vals, mask

@@ -1,0 +1,97 @@
+"""L1 — Pallas kernels for the vectorised-speculation step functions.
+
+The per-lane guarded-update compute (store values + store mask) runs as a
+Pallas kernel; gathers/scatters stay outside (the DU owns memory, exactly
+as in the paper's architecture — TPU Pallas has no efficient dynamic
+scatter, see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping notes (§Hardware-Adaptation):
+- lane-blocked 1-D grid via `BlockSpec((LANE_BLOCK,), ...)` — each block
+  fits VMEM trivially (3 × LANE_BLOCK × 8 B);
+- predication is *data* (the mask), not control: `jnp.where`/comparisons
+  vectorise on the VPU, mirroring the paper's poison-bit semantics where
+  mis-speculation never branches;
+- `interpret=True` everywhere: this image's PJRT is CPU-only; real-TPU
+  lowering would emit a Mosaic custom-call (compile-only target).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LANE_BLOCK = 128
+
+
+def _grid(n):
+    assert n % LANE_BLOCK == 0, f"batch {n} must be a multiple of {LANE_BLOCK}"
+    return (n // LANE_BLOCK,)
+
+
+def _spec(n):
+    del n
+    return pl.BlockSpec((LANE_BLOCK,), lambda i: (i,))
+
+
+def _guarded_inc_kernel(g_ref, vals_ref, mask_ref):
+    """vals = g + 1; mask = g < CAP (the hist update)."""
+    g = g_ref[...]
+    vals_ref[...] = g + 1
+    mask_ref[...] = (g < ref.HIST_CAP).astype(jnp.int64)
+
+
+def guarded_inc(gathered):
+    """Pallas version of the hist update over pre-gathered guard values."""
+    n = gathered.shape[0]
+    return pl.pallas_call(
+        _guarded_inc_kernel,
+        grid=_grid(n),
+        in_specs=[_spec(n)],
+        out_specs=(_spec(n), _spec(n)),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+        ),
+        interpret=True,
+    )(gathered)
+
+
+def _thr_mask_kernel(r_ref, g_ref, b_ref, mask_ref):
+    """mask = (r + g + b) > T."""
+    s = r_ref[...] + g_ref[...] + b_ref[...]
+    mask_ref[...] = (s > ref.THR_T).astype(jnp.int64)
+
+
+def thr_mask(r, g, b):
+    n = r.shape[0]
+    return pl.pallas_call(
+        _thr_mask_kernel,
+        grid=_grid(n),
+        in_specs=[_spec(n), _spec(n), _spec(n)],
+        out_specs=(_spec(n),),
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.int64),),
+        interpret=True,
+    )(r, g, b)
+
+
+def _saturating_add_kernel(g_ref, p_ref, vals_ref, mask_ref):
+    """vals = g + p; mask = g < CAP (the spmv accumulate)."""
+    g = g_ref[...]
+    vals_ref[...] = g + p_ref[...]
+    mask_ref[...] = (g < ref.SPMV_CAP).astype(jnp.int64)
+
+
+def saturating_add(gathered, prods):
+    n = gathered.shape[0]
+    return pl.pallas_call(
+        _saturating_add_kernel,
+        grid=_grid(n),
+        in_specs=[_spec(n), _spec(n)],
+        out_specs=(_spec(n), _spec(n)),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+        ),
+        interpret=True,
+    )(gathered, prods)

@@ -1,0 +1,54 @@
+"""L2 — JAX step functions for vectorised speculation (paper §10).
+
+Each variant composes: gather (speculative vector request) → L1 Pallas
+kernel (per-lane values + store mask) → outputs. The Rust coordinator
+(`runtime::vector_spec`) applies the masked scatter; Python never runs on
+the request path.
+
+Shapes are fixed at AOT time (one compiled executable per variant — one
+HLO artifact each, loaded once by the Rust runtime).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import spec_mask
+
+BATCH = 256
+HIST_BINS = 256
+SPMV_N = 32  # padded up from the scalar kernel's 20 (fixed-shape AOT)
+
+
+def hist_step(h, idx):
+    """(H[bins], idx[batch]) -> (new_vals[batch], mask[batch])."""
+    idx = jnp.clip(idx, 0, h.shape[0] - 1)
+    gathered = h[idx]
+    vals, mask = spec_mask.guarded_inc(gathered)
+    return vals, mask
+
+
+def thr_step(r, g, b):
+    """(r, g, b)[batch] -> (mask[batch],) — store mask for the zeroing."""
+    return spec_mask.thr_mask(r, g, b)
+
+
+def spmv_step(y, cols, prods):
+    """(y[n], cols[batch], prods[batch]) -> (new_vals, mask)."""
+    cols = jnp.clip(cols, 0, y.shape[0] - 1)
+    gathered = y[cols]
+    vals, mask = spec_mask.saturating_add(gathered, prods)
+    return vals, mask
+
+
+def variants():
+    """AOT variants: name -> (fn, example shapes)."""
+    i64 = jnp.int64
+    import jax
+
+    def spec(shape):
+        return jax.ShapeDtypeStruct(shape, i64)
+
+    return {
+        "hist_step": (hist_step, (spec((HIST_BINS,)), spec((BATCH,)))),
+        "thr_step": (thr_step, (spec((BATCH,)), spec((BATCH,)), spec((BATCH,)))),
+        "spmv_step": (spmv_step, (spec((SPMV_N,)), spec((BATCH,)), spec((BATCH,)))),
+    }

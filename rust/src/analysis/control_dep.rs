@@ -1,0 +1,317 @@
+//! Post-dominators and control dependence.
+//!
+//! Control dependence follows Ferrante/Ottenstein/Warren: block `b` is
+//! control dependent on branch block `a` iff `b` post-dominates some
+//! successor of `a` but does not strictly post-dominate `a`. The paper
+//! computes control dependencies "using the control-flow graph and
+//! dominator tree" (§3.2); we use the standard post-dominance formulation.
+
+use crate::ir::{BlockId, Function};
+
+/// Post-dominator tree over the reversed CFG with a virtual exit that
+/// connects every `Ret` block (and, defensively, every block with no
+/// successors).
+pub struct PostDomTree {
+    /// Immediate post-dominator per block; virtual exit = `u32::MAX`.
+    ipdom: Vec<Option<u32>>,
+    n: usize,
+}
+
+const VEXIT: u32 = u32::MAX;
+
+impl PostDomTree {
+    pub fn new(f: &Function) -> Self {
+        let n = f.num_blocks();
+        // Reversed graph: node ids 0..n plus virtual exit VEXIT.
+        // succs_rev(b) = preds(b) in original; entry of the reversed graph
+        // is VEXIT with succs = exit blocks.
+        let preds = f.preds();
+        let exits: Vec<BlockId> = (0..n)
+            .map(|i| BlockId(i as u32))
+            .filter(|&b| f.succs(b).is_empty())
+            .collect();
+
+        // Reverse post-order on the reversed graph from VEXIT.
+        let mut visited = vec![false; n];
+        let mut po: Vec<u32> = Vec::with_capacity(n + 1);
+        // DFS from each exit (VEXIT's successors).
+        #[allow(clippy::needless_range_loop)]
+        {
+            let mut stack: Vec<(u32, usize)> = Vec::new();
+            for &e in &exits {
+                if visited[e.index()] {
+                    continue;
+                }
+                visited[e.index()] = true;
+                stack.push((e.0, 0));
+                while let Some(&mut (b, ref mut i)) = stack.last_mut() {
+                    let ss = &preds[b as usize];
+                    if *i < ss.len() {
+                        let s = ss[*i];
+                        *i += 1;
+                        if !visited[s.index()] {
+                            visited[s.index()] = true;
+                            stack.push((s.0, 0));
+                        }
+                    } else {
+                        po.push(b);
+                        stack.pop();
+                    }
+                }
+            }
+        }
+        po.push(VEXIT);
+        let rpo: Vec<u32> = po.iter().rev().copied().collect();
+        let mut rpo_pos = vec![usize::MAX; n];
+        let mut vexit_pos = 0usize;
+        for (i, &b) in rpo.iter().enumerate() {
+            if b == VEXIT {
+                vexit_pos = i;
+            } else {
+                rpo_pos[b as usize] = i;
+            }
+        }
+
+        let pos = |b: u32| -> usize {
+            if b == VEXIT {
+                vexit_pos
+            } else {
+                rpo_pos[b as usize]
+            }
+        };
+
+        let mut ipdom: Vec<Option<u32>> = vec![None; n];
+        // preds in the reversed graph = succs in original, plus VEXIT for
+        // exit blocks.
+        let rev_preds = |b: u32| -> Vec<u32> {
+            let mut v: Vec<u32> = f.succs(BlockId(b)).iter().map(|s| s.0).collect();
+            if v.is_empty() {
+                v.push(VEXIT);
+            }
+            v
+        };
+        let get_idom = |ipdom: &Vec<Option<u32>>, b: u32| -> Option<u32> {
+            if b == VEXIT {
+                Some(VEXIT)
+            } else {
+                ipdom[b as usize]
+            }
+        };
+
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for &b in rpo.iter() {
+                if b == VEXIT {
+                    continue;
+                }
+                let mut new_idom: Option<u32> = None;
+                for p in rev_preds(b) {
+                    if get_idom(&ipdom, p).is_none() {
+                        continue;
+                    }
+                    new_idom = Some(match new_idom {
+                        None => p,
+                        Some(cur) => {
+                            // intersect
+                            let (mut a, mut c) = (p, cur);
+                            while a != c {
+                                while pos(a) > pos(c) {
+                                    a = get_idom(&ipdom, a).unwrap();
+                                }
+                                while pos(c) > pos(a) {
+                                    c = get_idom(&ipdom, c).unwrap();
+                                }
+                            }
+                            a
+                        }
+                    });
+                }
+                if let Some(ni) = new_idom {
+                    if ipdom[b as usize] != Some(ni) {
+                        ipdom[b as usize] = Some(ni);
+                        changed = true;
+                    }
+                }
+            }
+        }
+
+        PostDomTree { ipdom, n }
+    }
+
+    /// Does `a` post-dominate `b` (reflexive)?
+    pub fn post_dominates(&self, a: BlockId, b: BlockId) -> bool {
+        let mut cur = b.0;
+        loop {
+            if cur == a.0 {
+                return true;
+            }
+            match if cur == VEXIT { None } else { self.ipdom[cur as usize] } {
+                Some(next) if next != cur => {
+                    if next == VEXIT && a.0 != VEXIT {
+                        return false;
+                    }
+                    cur = next;
+                }
+                _ => return false,
+            }
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.n
+    }
+}
+
+/// Control-dependence relation, computed once per function.
+pub struct ControlDeps {
+    /// `deps[b]` = branch blocks that `b` is *directly* control dependent
+    /// on.
+    deps: Vec<Vec<BlockId>>,
+}
+
+impl ControlDeps {
+    pub fn new(f: &Function) -> Self {
+        let pdt = PostDomTree::new(f);
+        let n = f.num_blocks();
+        let mut deps = vec![Vec::new(); n];
+        // Classic Ferrante/Ottenstein/Warren runner walk: for each branch
+        // block `a` with successor `s`, every block on the post-dominator
+        // spine from `s` up to (excluding) ipdom(a) is control dependent
+        // on `a`.
+        for a in 0..n {
+            let ab = BlockId(a as u32);
+            let succs = f.succs(ab);
+            if succs.len() < 2 {
+                continue;
+            }
+            let ipdom_a = pdt.ipdom[a]; // may be VEXIT
+            for &s in &succs {
+                let mut runner = s.0;
+                loop {
+                    if Some(runner) == ipdom_a || runner == VEXIT {
+                        break;
+                    }
+                    if !deps[runner as usize].contains(&ab) {
+                        deps[runner as usize].push(ab);
+                    }
+                    match pdt.ipdom[runner as usize] {
+                        Some(next) => runner = next,
+                        None => break,
+                    }
+                }
+            }
+        }
+        ControlDeps { deps }
+    }
+
+    /// Blocks that `b` is directly control dependent on.
+    pub fn direct(&self, b: BlockId) -> &[BlockId] {
+        &self.deps[b.index()]
+    }
+
+    /// Transitive control dependencies of `b` (includes direct).
+    pub fn transitive(&self, b: BlockId) -> Vec<BlockId> {
+        let mut out: Vec<BlockId> = Vec::new();
+        let mut work: Vec<BlockId> = self.deps[b.index()].clone();
+        while let Some(x) = work.pop() {
+            if out.contains(&x) {
+                continue;
+            }
+            out.push(x);
+            for &d in &self.deps[x.index()] {
+                if !out.contains(&d) {
+                    work.push(d);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn is_control_dependent(&self, b: BlockId, on: BlockId) -> bool {
+        self.transitive(b).contains(&on)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+    use crate::ir::BlockId;
+
+    #[test]
+    fn diamond_control_deps() {
+        let (_, f) = parse_single(
+            r#"
+func @d(%c: b1) {
+entry:
+  condbr %c, left, right
+left:
+  br join
+right:
+  br join
+join:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let cd = ControlDeps::new(&f);
+        assert_eq!(cd.direct(BlockId(1)), &[BlockId(0)]); // left cd on entry
+        assert_eq!(cd.direct(BlockId(2)), &[BlockId(0)]); // right cd on entry
+        assert!(cd.direct(BlockId(3)).is_empty()); // join not cd
+        assert!(cd.direct(BlockId(0)).is_empty());
+    }
+
+    #[test]
+    fn nested_triangle_control_deps() {
+        let (_, f) = parse_single(
+            r#"
+func @t(%c: b1) {
+entry:
+  condbr %c, outer, exit
+outer:
+  condbr %c, inner, join
+inner:
+  br join
+join:
+  br exit
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let cd = ControlDeps::new(&f);
+        // inner cd on outer; outer cd on entry; join cd on entry
+        assert_eq!(cd.direct(BlockId(2)), &[BlockId(1)]);
+        assert_eq!(cd.direct(BlockId(1)), &[BlockId(0)]);
+        assert_eq!(cd.direct(BlockId(3)), &[BlockId(0)]);
+        // inner transitively cd on entry
+        let t = cd.transitive(BlockId(2));
+        assert!(t.contains(&BlockId(0)) && t.contains(&BlockId(1)));
+    }
+
+    #[test]
+    fn loop_body_control_dep_on_header() {
+        let (_, f) = parse_single(
+            r#"
+func @l(%c: b1) {
+entry:
+  br header
+header:
+  condbr %c, body, exit
+body:
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let cd = ControlDeps::new(&f);
+        // body cd on header; header cd on itself (loop-carried)
+        assert_eq!(cd.direct(BlockId(2)), &[BlockId(1)]);
+        assert!(cd.direct(BlockId(1)).contains(&BlockId(1)));
+    }
+}

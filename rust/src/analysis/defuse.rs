@@ -1,0 +1,150 @@
+//! Def-use chains over the SSA value arena.
+
+use crate::ir::{Function, InstrId, Op, Terminator, ValueDef, ValueId};
+
+pub struct DefUse {
+    /// `users[v]` = instructions that use value `v` as an operand.
+    users: Vec<Vec<InstrId>>,
+    /// Blocks whose terminator condition uses `v`.
+    term_users: Vec<Vec<crate::ir::BlockId>>,
+}
+
+impl DefUse {
+    pub fn new(f: &Function) -> Self {
+        let nv = f.values.len();
+        let mut users = vec![Vec::new(); nv];
+        let mut term_users = vec![Vec::new(); nv];
+        for (bi, b) in f.blocks.iter().enumerate() {
+            for &iid in &b.instrs {
+                for v in f.instr(iid).op.uses() {
+                    users[v.index()].push(iid);
+                }
+            }
+            if let Terminator::CondBr { cond, .. } = b.term {
+                term_users[cond.index()].push(crate::ir::BlockId(bi as u32));
+            }
+        }
+        DefUse { users, term_users }
+    }
+
+    pub fn users(&self, v: ValueId) -> &[InstrId] {
+        &self.users[v.index()]
+    }
+
+    pub fn term_users(&self, v: ValueId) -> &[crate::ir::BlockId] {
+        &self.term_users[v.index()]
+    }
+
+    /// Transitive forward slice: all instructions reachable in the def-use
+    /// graph starting from `roots` (values). φ nodes are traversed like
+    /// any other user.
+    pub fn forward_slice(&self, f: &Function, roots: &[ValueId]) -> Vec<InstrId> {
+        let mut out: Vec<InstrId> = Vec::new();
+        let mut seen = vec![false; f.instrs.len()];
+        let mut work: Vec<ValueId> = roots.to_vec();
+        let mut seen_v = vec![false; f.values.len()];
+        while let Some(v) = work.pop() {
+            if seen_v[v.index()] {
+                continue;
+            }
+            seen_v[v.index()] = true;
+            for &iid in self.users(v) {
+                if !seen[iid.index()] {
+                    seen[iid.index()] = true;
+                    out.push(iid);
+                    if let Some(r) = f.instr(iid).result {
+                        work.push(r);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Backward slice: instructions that (transitively) feed the given
+    /// values. Returns instruction ids; parameters terminate chains.
+    /// When `trace_phi_terminators` is set, encountering a φ also pulls in
+    /// the terminator conditions of the φ's incoming blocks — the paper's
+    /// Definition 4.1 refinement.
+    pub fn backward_slice(
+        &self,
+        f: &Function,
+        roots: &[ValueId],
+        trace_phi_terminators: bool,
+    ) -> Vec<InstrId> {
+        let mut out: Vec<InstrId> = Vec::new();
+        let mut seen_i = vec![false; f.instrs.len()];
+        let mut work: Vec<ValueId> = roots.to_vec();
+        let mut seen_v = vec![false; f.values.len()];
+        while let Some(v) = work.pop() {
+            if seen_v[v.index()] {
+                continue;
+            }
+            seen_v[v.index()] = true;
+            let ValueDef::Instr(iid) = f.value(v).def else { continue };
+            if seen_i[iid.index()] {
+                continue;
+            }
+            seen_i[iid.index()] = true;
+            out.push(iid);
+            let op = &f.instr(iid).op;
+            for u in op.uses() {
+                work.push(u);
+            }
+            if trace_phi_terminators {
+                if let Op::Phi { incomings, .. } = op {
+                    for (bb, _) in incomings {
+                        if let Terminator::CondBr { cond, .. } = f.block(*bb).term {
+                            work.push(cond);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+
+    #[test]
+    fn users_and_slices() {
+        let (_, f) = parse_single(
+            r#"
+array @A : i64[8]
+func @f(%n: i64) {
+entry:
+  %c1 = const.i 1
+  %x = add.i %n, %c1
+  %y = add.i %x, %c1
+  %z = mul.i %y, %y
+  store @A[%z], %x
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let du = DefUse::new(&f);
+        // find value ids by name
+        let byname = |n: &str| {
+            f.values
+                .iter()
+                .enumerate()
+                .find(|(_, v)| v.name.as_deref() == Some(n))
+                .map(|(i, _)| crate::ir::ValueId(i as u32))
+                .unwrap()
+        };
+        let x = byname("x");
+        let z = byname("z");
+        assert_eq!(du.users(x).len(), 2); // y's add + the store
+        // forward slice from x reaches y, z, store
+        let fs = du.forward_slice(&f, &[x]);
+        assert_eq!(fs.len(), 3);
+        // backward slice from z: z, y, x, c1 (+ n is a param, stops)
+        let bs = du.backward_slice(&f, &[z], false);
+        assert_eq!(bs.len(), 4);
+    }
+}

@@ -1,0 +1,227 @@
+//! Dominator tree via the Cooper–Harvey–Kennedy iterative algorithm.
+
+use super::rpo;
+use crate::ir::{BlockId, Function};
+
+pub struct DomTree {
+    /// Immediate dominator per block; `idom[entry] == entry`;
+    /// `None` for unreachable blocks.
+    idom: Vec<Option<BlockId>>,
+    entry: BlockId,
+}
+
+impl DomTree {
+    pub fn new(f: &Function) -> Self {
+        Self::new_from(f, f.entry, f.preds())
+    }
+
+    /// Build over the subgraph reachable from `entry` with the given
+    /// predecessor lists (lets post-dominators reuse this on the reversed
+    /// CFG).
+    pub fn new_from(f: &Function, entry: BlockId, preds: Vec<Vec<BlockId>>) -> Self {
+        let n = f.num_blocks();
+        let rpo = rpo::reverse_post_order_from(f, entry, &|_, _| false);
+        let mut rpo_pos = vec![usize::MAX; n];
+        for (i, &b) in rpo.iter().enumerate() {
+            rpo_pos[b.index()] = i;
+        }
+
+        let mut idom: Vec<Option<BlockId>> = vec![None; n];
+        idom[entry.index()] = Some(entry);
+
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for &b in rpo.iter().skip(1) {
+                // first processed predecessor
+                let mut new_idom: Option<BlockId> = None;
+                for &p in &preds[b.index()] {
+                    if idom[p.index()].is_none() {
+                        continue;
+                    }
+                    new_idom = Some(match new_idom {
+                        None => p,
+                        Some(cur) => Self::intersect(&idom, &rpo_pos, p, cur),
+                    });
+                }
+                if let Some(ni) = new_idom {
+                    if idom[b.index()] != Some(ni) {
+                        idom[b.index()] = Some(ni);
+                        changed = true;
+                    }
+                }
+            }
+        }
+
+        let _ = rpo_pos; // construction-only
+        DomTree { idom, entry }
+    }
+
+    fn intersect(
+        idom: &[Option<BlockId>],
+        rpo_pos: &[usize],
+        mut a: BlockId,
+        mut b: BlockId,
+    ) -> BlockId {
+        while a != b {
+            while rpo_pos[a.index()] > rpo_pos[b.index()] {
+                a = idom[a.index()].unwrap();
+            }
+            while rpo_pos[b.index()] > rpo_pos[a.index()] {
+                b = idom[b.index()].unwrap();
+            }
+        }
+        a
+    }
+
+    pub fn entry(&self) -> BlockId {
+        self.entry
+    }
+
+    pub fn is_reachable(&self, b: BlockId) -> bool {
+        self.idom[b.index()].is_some()
+    }
+
+    /// Immediate dominator (None for the entry and unreachable blocks).
+    pub fn idom(&self, b: BlockId) -> Option<BlockId> {
+        if b == self.entry {
+            None
+        } else {
+            self.idom[b.index()]
+        }
+    }
+
+    /// Does `a` dominate `b` (reflexive)?
+    pub fn dominates(&self, a: BlockId, b: BlockId) -> bool {
+        if !self.is_reachable(a) || !self.is_reachable(b) {
+            return false;
+        }
+        let mut cur = b;
+        loop {
+            if cur == a {
+                return true;
+            }
+            if cur == self.entry {
+                return false;
+            }
+            cur = self.idom[cur.index()].unwrap();
+        }
+    }
+
+    pub fn strictly_dominates(&self, a: BlockId, b: BlockId) -> bool {
+        a != b && self.dominates(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+    use crate::ir::BlockId;
+
+    /// Naive O(n²) dominator computation for cross-checking.
+    fn naive_dominators(f: &crate::ir::Function) -> Vec<Vec<bool>> {
+        let n = f.num_blocks();
+        // dom[b] = set of blocks that dominate b
+        let reachable = |without: Option<BlockId>| -> Vec<bool> {
+            let mut seen = vec![false; n];
+            let mut stack = vec![f.entry];
+            if Some(f.entry) != without {
+                seen[f.entry.index()] = true;
+                while let Some(b) = stack.pop() {
+                    for s in f.succs(b) {
+                        if Some(s) != without && !seen[s.index()] {
+                            seen[s.index()] = true;
+                            stack.push(s);
+                        }
+                    }
+                }
+            }
+            seen
+        };
+        let base = reachable(None);
+        let mut dom = vec![vec![false; n]; n];
+        for a in 0..n {
+            let without_a = reachable(Some(BlockId(a as u32)));
+            for b in 0..n {
+                if base[b] && (a == b || !without_a[b]) {
+                    dom[b][a] = true; // a dominates b
+                }
+            }
+        }
+        dom
+    }
+
+    #[test]
+    fn matches_naive_on_nested_cfg() {
+        let (_, f) = parse_single(
+            r#"
+func @g(%c: b1) {
+entry:
+  condbr %c, a, b
+a:
+  condbr %c, a1, a2
+a1:
+  br join_a
+a2:
+  br join_a
+join_a:
+  br join
+b:
+  br join
+join:
+  condbr %c, entry2, exit
+entry2:
+  br join
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let dt = DomTree::new(&f);
+        let naive = naive_dominators(&f);
+        let n = f.num_blocks();
+        for a in 0..n {
+            for b in 0..n {
+                let (ab, bb) = (BlockId(a as u32), BlockId(b as u32));
+                if dt.is_reachable(ab) && dt.is_reachable(bb) {
+                    assert_eq!(
+                        dt.dominates(ab, bb),
+                        naive[b][a],
+                        "dominates({a},{b}) mismatch"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idom_chain_in_loop() {
+        let (_, f) = parse_single(
+            r#"
+func @l(%c: b1) {
+entry:
+  br header
+header:
+  condbr %c, body, exit
+body:
+  condbr %c, then, latch
+then:
+  br latch
+latch:
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let dt = DomTree::new(&f);
+        // header idom = entry; body idom = header; latch idom = body
+        assert_eq!(dt.idom(BlockId(1)), Some(BlockId(0)));
+        assert_eq!(dt.idom(BlockId(2)), Some(BlockId(1)));
+        assert_eq!(dt.idom(BlockId(4)), Some(BlockId(2)));
+        assert!(dt.dominates(BlockId(1), BlockId(5)));
+    }
+}

@@ -1,0 +1,333 @@
+//! Loss-of-decoupling (LoD) analysis — paper §4.
+//!
+//! Given the set `A` of *non-trivially-prefetchable* loads (loads with
+//! potential RAW hazards, i.e. loads from arrays that are also stored)
+//! and the set `G` of address-generating instructions, the analysis
+//! reports:
+//!
+//! - **Data LoD** (Definition 4.1): a def-use path from some `a ∈ A` to
+//!   `g ∈ G`, tracing through φ incoming-block terminators. Such requests
+//!   cannot be recovered by control speculation (e.g. `A[f(A[i])]`,
+//!   `if (A[i]) A[i++] = 1`).
+//! - **Control LoD** (Definition 4.2): a request control-dependent on a
+//!   branch whose condition depends on some `a ∈ A`. The branch's block is
+//!   the *LoD control dependency source*; these are what Algorithm 1
+//!   speculates around.
+//! - The **chain heads** (§5.1.2): source blocks that are not themselves
+//!   destinations of another LoD control dependency.
+
+use super::control_dep::ControlDeps;
+use super::defuse::DefUse;
+use super::domtree::DomTree;
+use super::loops::LoopInfo;
+use crate::ir::{ArrayId, BlockId, Function, InstrId, Module, Op};
+use std::collections::{HashMap, HashSet};
+
+/// Why a given memory op loses decoupling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LodKind {
+    /// Def-use path from a hazardous load into the address computation.
+    Data,
+    /// Control-dependent on a branch fed by a hazardous load.
+    Control { sources: Vec<BlockId> },
+}
+
+pub struct LodAnalysis {
+    /// Arrays with potential RAW hazards (stored somewhere in the
+    /// function). Loads from these form the paper's `A` set.
+    pub hazard_arrays: Vec<ArrayId>,
+    /// Memory ops (instr ids of `Load`/`Store`) that have a *data* LoD —
+    /// speculation cannot help these (paper §4).
+    pub data_lod: Vec<InstrId>,
+    /// For each memory op with a control LoD: its source blocks.
+    pub control_lod: HashMap<InstrId, Vec<BlockId>>,
+    /// All LoD control-dependency source blocks.
+    pub src_blocks: Vec<BlockId>,
+    /// §5.1.2 chain heads: src blocks not themselves control-dependent on
+    /// another src block (within the same innermost loop).
+    pub chain_heads: Vec<BlockId>,
+}
+
+impl LodAnalysis {
+    pub fn new(m: &Module, f: &Function) -> Self {
+        let dom = DomTree::new(f);
+        let loops = LoopInfo::new(f, &dom);
+        let cd = ControlDeps::new(f);
+        let du = DefUse::new(f);
+        Self::with_analyses(m, f, &dom, &loops, &cd, &du)
+    }
+
+    pub fn with_analyses(
+        _m: &Module,
+        f: &Function,
+        _dom: &DomTree,
+        loops: &LoopInfo,
+        cd: &ControlDeps,
+        du: &DefUse,
+    ) -> Self {
+        // A-set arrays: stored anywhere in f ⇒ loads from them carry a RAW
+        // hazard (the DU must see every earlier store address before the
+        // load can issue).
+        let mut hazard_arrays: Vec<ArrayId> = Vec::new();
+        for instr in &f.instrs {
+            if let Op::Store { arr, .. } = instr.op {
+                if !hazard_arrays.contains(&arr) {
+                    hazard_arrays.push(arr);
+                }
+            }
+        }
+
+        // Hazardous load result values (the `A` set).
+        let mut hazard_load_results: HashSet<crate::ir::ValueId> = HashSet::new();
+        let mut hazard_load_instrs: HashSet<InstrId> = HashSet::new();
+        for (bi, b) in f.blocks.iter().enumerate() {
+            let _ = bi;
+            for &iid in &b.instrs {
+                if let Op::Load { arr, .. } = f.instr(iid).op {
+                    if hazard_arrays.contains(&arr) {
+                        hazard_load_instrs.insert(iid);
+                        if let Some(r) = f.instr(iid).result {
+                            hazard_load_results.insert(r);
+                        }
+                    }
+                }
+            }
+        }
+
+        let block_of: HashMap<InstrId, BlockId> = {
+            let mut map = HashMap::new();
+            for (bi, b) in f.blocks.iter().enumerate() {
+                for &iid in &b.instrs {
+                    map.insert(iid, BlockId(bi as u32));
+                }
+            }
+            map
+        };
+
+        // -- Definition 4.1: data LoD ---------------------------------------
+        let mut data_lod: Vec<InstrId> = Vec::new();
+        for (bi, b) in f.blocks.iter().enumerate() {
+            let _ = bi;
+            for &iid in &b.instrs {
+                let idx = match f.instr(iid).op {
+                    Op::Load { idx, .. } => idx,
+                    Op::Store { idx, .. } => idx,
+                    _ => continue,
+                };
+                let slice = du.backward_slice(f, &[idx], true);
+                if slice.iter().any(|s| hazard_load_instrs.contains(s)) {
+                    data_lod.push(iid);
+                }
+            }
+        }
+
+        // -- Definition 4.2: control LoD --------------------------------------
+        // A branch block is an *LoD source* if its condition's backward
+        // slice (with φ-terminator tracing) contains a hazardous load.
+        let mut lod_branch: Vec<bool> = vec![false; f.num_blocks()];
+        for (bi, b) in f.blocks.iter().enumerate() {
+            if let crate::ir::Terminator::CondBr { cond, .. } = b.term {
+                let slice = du.backward_slice(f, &[cond], true);
+                if slice.iter().any(|s| hazard_load_instrs.contains(s)) {
+                    lod_branch[bi] = true;
+                }
+            }
+        }
+
+        let mut control_lod: HashMap<InstrId, Vec<BlockId>> = HashMap::new();
+        let mut src_blocks: Vec<BlockId> = Vec::new();
+        for (bi, b) in f.blocks.iter().enumerate() {
+            let bb = BlockId(bi as u32);
+            for &iid in &b.instrs {
+                if !f.instr(iid).op.is_memory() {
+                    continue;
+                }
+                let sources: Vec<BlockId> = cd
+                    .transitive(bb)
+                    .into_iter()
+                    .filter(|s| lod_branch[s.index()])
+                    .collect();
+                if !sources.is_empty() {
+                    for &s in &sources {
+                        if !src_blocks.contains(&s) {
+                            src_blocks.push(s);
+                        }
+                    }
+                    control_lod.insert(iid, sources);
+                }
+            }
+        }
+        src_blocks.sort();
+
+        // -- §5.1.2 chain heads -------------------------------------------------
+        // A source that is itself (transitively) control-dependent on
+        // another LoD source is a chain link, not a head. Restrict to
+        // sources within the same innermost loop (Algorithm 1 never leaves
+        // the innermost loop of srcBB).
+        let chain_heads: Vec<BlockId> = src_blocks
+            .iter()
+            .copied()
+            .filter(|&s| {
+                !cd.transitive(s).iter().any(|&other| {
+                    other != s
+                        && src_blocks.contains(&other)
+                        && loops.innermost_idx(other) == loops.innermost_idx(s)
+                })
+            })
+            .collect();
+
+        let _ = block_of;
+        LodAnalysis { hazard_arrays, data_lod, control_lod, src_blocks, chain_heads }
+    }
+
+    /// Does this function have any LoD at all?
+    pub fn has_lod(&self) -> bool {
+        !self.data_lod.is_empty() || !self.control_lod.is_empty()
+    }
+
+    /// Memory ops with a control LoD but no data LoD — the ones Algorithm 1
+    /// can speculate.
+    pub fn speculable_ops(&self) -> Vec<InstrId> {
+        self.control_lod
+            .keys()
+            .copied()
+            .filter(|i| !self.data_lod.contains(i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+
+    /// The paper's Figure 1b shape: `if (A[i] > 0) A[idx[i]] = f(...)`.
+    const FIG1B: &str = r#"
+array @A : i64[100]
+array @idx : i64[100]
+
+func @fig1b(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %f = add.i %aw, %c1
+  store @A[%w], %f
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#;
+
+    #[test]
+    fn fig1b_has_control_lod_on_store() {
+        let (m, f) = parse_single(FIG1B).unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        // A is stored → hazard array; idx is not.
+        assert_eq!(lod.hazard_arrays.len(), 1);
+        assert_eq!(m.array(lod.hazard_arrays[0]).name, "A");
+        // no data LoD: idx[i] and A[w] addresses come from i / idx[i], and
+        // idx is not hazardous.
+        assert!(lod.data_lod.is_empty(), "{:?}", lod.data_lod);
+        // the store (and the loads inside `then`) are control dependent on
+        // `body`'s branch, which reads A → control LoD with source=body.
+        assert!(!lod.control_lod.is_empty());
+        let body = BlockId(2);
+        assert_eq!(lod.src_blocks, vec![body]);
+        assert_eq!(lod.chain_heads, vec![body]);
+        for sources in lod.control_lod.values() {
+            assert_eq!(sources, &vec![body]);
+        }
+    }
+
+    #[test]
+    fn dynamic_queue_pattern_is_data_lod() {
+        // if (A[i]) A[q++] = 1 — the φ for q depends on loading from A via
+        // the terminator of its incoming block (Definition 4.1 tracing).
+        let (m, f) = parse_single(
+            r#"
+array @A : i64[100]
+
+func @dynq(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %q = phi i64 [entry: %c0], [latch: %qnext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %c1 = const.i 1
+  store @A[%q], %c1
+  %qinc = add.i %q, %c1
+  br latch
+latch:
+  %qnext = phi i64 [body: %q], [then: %qinc]
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        // the store's address %q is a φ whose incoming block (latch) has a
+        // plain br; but qnext's φ incoming block `body` terminates on %p
+        // which loads A — the φ-terminator trace must catch it.
+        assert!(
+            !lod.data_lod.is_empty(),
+            "dynamic queue store must be flagged as data LoD"
+        );
+    }
+
+    #[test]
+    fn no_store_no_hazard() {
+        let (m, f) = parse_single(
+            r#"
+array @A : i64[100]
+array @B : i64[100]
+
+func @readonly(%n: i64) {
+entry:
+  %c0 = const.i 0
+  %a = load @A[%c0]
+  %b = load @B[%a]
+  %p = icmp.gt %b, %c0
+  condbr %p, t, e
+t:
+  br e
+e:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        assert!(lod.hazard_arrays.is_empty());
+        assert!(!lod.has_lod());
+    }
+}

@@ -1,0 +1,291 @@
+//! Natural loop detection, loop nesting, canonical-form checks and
+//! reducibility.
+//!
+//! The paper assumes a canonical loop representation — single header,
+//! single backedge from the latch — and reducible control flow (§3.2).
+
+use super::domtree::DomTree;
+use crate::ir::{BlockId, Function};
+
+#[derive(Clone, Debug)]
+pub struct Loop {
+    pub header: BlockId,
+    /// Source of the backedge. With canonical loops there is exactly one.
+    pub latches: Vec<BlockId>,
+    /// All blocks in the loop body (including header and latches).
+    pub blocks: Vec<BlockId>,
+    /// Parent loop index in [`LoopInfo::loops`], if nested.
+    pub parent: Option<usize>,
+    /// Nesting depth (outermost = 1).
+    pub depth: u32,
+}
+
+impl Loop {
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.blocks.contains(&b)
+    }
+
+    /// The canonical single latch; panics if the loop is not canonical.
+    pub fn latch(&self) -> BlockId {
+        assert_eq!(self.latches.len(), 1, "loop at {} is not canonical", self.header);
+        self.latches[0]
+    }
+}
+
+pub struct LoopInfo {
+    pub loops: Vec<Loop>,
+    /// Innermost loop index per block.
+    innermost: Vec<Option<usize>>,
+    /// Is the CFG reducible? (Every retreating edge is a backedge to a
+    /// dominating header.)
+    pub reducible: bool,
+}
+
+impl LoopInfo {
+    pub fn new(f: &Function, dom: &DomTree) -> Self {
+        let n = f.num_blocks();
+
+        // Find backedges: a -> h where h dominates a.
+        // Also detect irreducibility: retreating edges (w.r.t. DFS) that
+        // are not backedges.
+        let mut backedges: Vec<(BlockId, BlockId)> = Vec::new();
+        let mut retreating_non_back = false;
+        {
+            // DFS with colors to find retreating edges.
+            #[derive(Clone, Copy, PartialEq)]
+            enum Color {
+                White,
+                Grey,
+                Black,
+            }
+            let mut color = vec![Color::White; n];
+            let mut stack: Vec<(BlockId, usize)> = vec![(f.entry, 0)];
+            color[f.entry.index()] = Color::Grey;
+            while let Some(&mut (b, ref mut i)) = stack.last_mut() {
+                let succs = f.succs(b);
+                if *i < succs.len() {
+                    let s = succs[*i];
+                    *i += 1;
+                    match color[s.index()] {
+                        Color::White => {
+                            color[s.index()] = Color::Grey;
+                            stack.push((s, 0));
+                        }
+                        Color::Grey => {
+                            // retreating edge
+                            if dom.dominates(s, b) {
+                                backedges.push((b, s));
+                            } else {
+                                retreating_non_back = true;
+                            }
+                        }
+                        Color::Black => {
+                            // cross/forward edge; if it retreats to a
+                            // non-dominating block that's still fine
+                            // (DAG edge).
+                        }
+                    }
+                } else {
+                    color[b.index()] = Color::Black;
+                    stack.pop();
+                }
+            }
+        }
+
+        // Group backedges by header; collect loop bodies by reverse
+        // reachability from latch to header.
+        let preds = f.preds();
+        let mut headers: Vec<BlockId> = Vec::new();
+        for &(_, h) in &backedges {
+            if !headers.contains(&h) {
+                headers.push(h);
+            }
+        }
+
+        let mut loops: Vec<Loop> = Vec::new();
+        for &h in &headers {
+            let latches: Vec<BlockId> =
+                backedges.iter().filter(|&&(_, hh)| hh == h).map(|&(l, _)| l).collect();
+            let mut blocks = vec![h];
+            let mut work: Vec<BlockId> = latches.clone();
+            while let Some(b) = work.pop() {
+                if blocks.contains(&b) {
+                    continue;
+                }
+                blocks.push(b);
+                for &p in &preds[b.index()] {
+                    if !blocks.contains(&p) {
+                        work.push(p);
+                    }
+                }
+            }
+            loops.push(Loop { header: h, latches, blocks, parent: None, depth: 1 });
+        }
+
+        // Nesting: loop A is nested in B if A's header is in B's blocks
+        // and A != B. Parent = smallest enclosing loop.
+        let order: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..loops.len()).collect();
+            idx.sort_by_key(|&i| loops[i].blocks.len());
+            idx
+        };
+        for &i in &order {
+            let mut best: Option<usize> = None;
+            for &j in &order {
+                if i == j {
+                    continue;
+                }
+                if loops[j].blocks.len() > loops[i].blocks.len()
+                    && loops[j].blocks.contains(&loops[i].header)
+                {
+                    match best {
+                        None => best = Some(j),
+                        Some(b) if loops[j].blocks.len() < loops[b].blocks.len() => {
+                            best = Some(j)
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            loops[i].parent = best;
+        }
+        // depths
+        for i in 0..loops.len() {
+            let mut d = 1;
+            let mut cur = loops[i].parent;
+            while let Some(p) = cur {
+                d += 1;
+                cur = loops[p].parent;
+            }
+            loops[i].depth = d;
+        }
+
+        // innermost loop per block
+        let mut innermost: Vec<Option<usize>> = vec![None; n];
+        for (li, l) in loops.iter().enumerate() {
+            for &b in &l.blocks {
+                match innermost[b.index()] {
+                    None => innermost[b.index()] = Some(li),
+                    Some(cur) if loops[cur].blocks.len() > l.blocks.len() => {
+                        innermost[b.index()] = Some(li)
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        LoopInfo { loops, innermost, reducible: !retreating_non_back }
+    }
+
+    /// The innermost loop containing `b`, if any.
+    pub fn innermost(&self, b: BlockId) -> Option<&Loop> {
+        self.innermost[b.index()].map(|i| &self.loops[i])
+    }
+
+    pub fn innermost_idx(&self, b: BlockId) -> Option<usize> {
+        self.innermost[b.index()]
+    }
+
+    /// Is `h` a loop header?
+    pub fn is_header(&self, h: BlockId) -> bool {
+        self.loops.iter().any(|l| l.header == h)
+    }
+
+    /// Is every loop canonical (single latch)?
+    pub fn all_canonical(&self) -> bool {
+        self.loops.iter().all(|l| l.latches.len() == 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+    use crate::ir::BlockId;
+
+    #[test]
+    fn simple_loop() {
+        let (_, f) = parse_single(
+            r#"
+func @l(%c: b1) {
+entry:
+  br header
+header:
+  condbr %c, body, exit
+body:
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let dom = DomTree::new(&f);
+        let li = LoopInfo::new(&f, &dom);
+        assert!(li.reducible);
+        assert_eq!(li.loops.len(), 1);
+        let l = &li.loops[0];
+        assert_eq!(l.header, BlockId(1));
+        assert_eq!(l.latches, vec![BlockId(2)]);
+        assert!(l.contains(BlockId(1)) && l.contains(BlockId(2)));
+        assert!(!l.contains(BlockId(3)));
+        assert!(li.all_canonical());
+    }
+
+    #[test]
+    fn nested_loops() {
+        let (_, f) = parse_single(
+            r#"
+func @n(%c: b1) {
+entry:
+  br h1
+h1:
+  condbr %c, h2, exit
+h2:
+  condbr %c, b2, l1
+b2:
+  br h2
+l1:
+  br h1
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let dom = DomTree::new(&f);
+        let li = LoopInfo::new(&f, &dom);
+        assert_eq!(li.loops.len(), 2);
+        let outer = li.loops.iter().find(|l| l.header == BlockId(1)).unwrap();
+        let inner = li.loops.iter().find(|l| l.header == BlockId(2)).unwrap();
+        assert_eq!(outer.depth, 1);
+        assert_eq!(inner.depth, 2);
+        assert!(outer.blocks.contains(&BlockId(2)));
+        // innermost of b2 is the inner loop
+        assert_eq!(li.innermost(BlockId(3)).unwrap().header, BlockId(2));
+        assert_eq!(li.innermost(BlockId(4)).unwrap().header, BlockId(1));
+    }
+
+    #[test]
+    fn irreducible_detected() {
+        // entry branches into the middle of a cycle: classic irreducible
+        let (_, f) = parse_single(
+            r#"
+func @i(%c: b1) {
+entry:
+  condbr %c, a, b
+a:
+  br b
+b:
+  condbr %c, a, exit
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let dom = DomTree::new(&f);
+        let li = LoopInfo::new(&f, &dom);
+        assert!(!li.reducible);
+    }
+}

@@ -1,0 +1,20 @@
+//! CFG and dataflow analyses used by the paper's transformations:
+//! (reverse) post-order, dominators, post-dominators, control dependence,
+//! natural loops + reducibility, forward-edge reachability, def-use
+//! chains, and the loss-of-decoupling (LoD) analysis of paper §4.
+
+pub mod control_dep;
+pub mod defuse;
+pub mod domtree;
+pub mod lod;
+pub mod loops;
+pub mod reach;
+pub mod rpo;
+
+pub use control_dep::ControlDeps;
+pub use defuse::DefUse;
+pub use domtree::DomTree;
+pub use lod::{LodAnalysis, LodKind};
+pub use loops::{Loop, LoopInfo};
+pub use reach::Reachability;
+pub use rpo::{post_order, reverse_post_order};

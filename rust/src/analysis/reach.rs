@@ -1,0 +1,105 @@
+//! Forward-edge reachability ("reachability ignores loop backedges",
+//! Algorithm 2 line 15).
+//!
+//! Precomputed as bitsets over the acyclic forward subgraph: with
+//! backedges removed a reducible CFG is a DAG, so one pass in post-order
+//! (successors before predecessors) suffices.
+
+use super::domtree::DomTree;
+use crate::ir::{BlockId, Function};
+
+pub struct Reachability {
+    /// `bits[a]` = bitset of blocks reachable from `a` (reflexive) via
+    /// forward edges only.
+    bits: Vec<Vec<u64>>,
+}
+
+impl Reachability {
+    /// `dom` is used to identify backedges (`a -> h` with `h` dominating
+    /// `a`).
+    pub fn new(f: &Function, dom: &DomTree) -> Self {
+        let n = f.num_blocks();
+        let words = n.div_ceil(64);
+        let mut bits = vec![vec![0u64; words]; n];
+
+        // Post-order of the forward DAG: successors are finished before
+        // their predecessors, so one sweep propagates full reachability.
+        let po = super::rpo::post_order_from(f, f.entry, &|from, to| dom.dominates(to, from));
+        for &b in &po {
+            let bi = b.index();
+            bits[bi][bi / 64] |= 1 << (bi % 64);
+            for s in f.succs(b) {
+                if dom.dominates(s, b) {
+                    continue; // backedge
+                }
+                let si = s.index();
+                if si == bi {
+                    continue;
+                }
+                // bits[bi] |= bits[si], avoiding simultaneous &mut borrows
+                let (lo, hi) = bits.split_at_mut(bi.max(si));
+                let (dst, src) = if bi < si {
+                    (&mut lo[bi], &hi[0])
+                } else {
+                    (&mut hi[0], &lo[si])
+                };
+                for w in 0..words {
+                    dst[w] |= src[w];
+                }
+            }
+        }
+
+        Reachability { bits }
+    }
+
+    /// Is `to` reachable from `from` following forward edges (reflexive)?
+    pub fn reachable(&self, from: BlockId, to: BlockId) -> bool {
+        let t = to.index();
+        self.bits[from.index()][t / 64] & (1 << (t % 64)) != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+    use crate::ir::BlockId;
+
+    #[test]
+    fn loop_reachability_ignores_backedge() {
+        let (_, f) = parse_single(
+            r#"
+func @l(%c: b1) {
+entry:
+  br header
+header:
+  condbr %c, body, exit
+body:
+  condbr %c, then, latch
+then:
+  br latch
+latch:
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let dom = DomTree::new(&f);
+        let r = Reachability::new(&f, &dom);
+        let b = |i: u32| BlockId(i);
+        // forward: entry(0)->header(1)->{body(2),exit(5)}, body->{then(3),latch(4)}
+        assert!(r.reachable(b(0), b(5)));
+        assert!(r.reachable(b(2), b(4)));
+        assert!(r.reachable(b(1), b(4)));
+        // backedge latch->header ignored:
+        assert!(!r.reachable(b(4), b(1)));
+        assert!(!r.reachable(b(4), b(2)));
+        // reflexive
+        assert!(r.reachable(b(3), b(3)));
+        // then cannot reach exit? then->latch->header(backedge cut), latch has no
+        // other succ — so no.
+        assert!(!r.reachable(b(3), b(5)));
+    }
+}

@@ -1,0 +1,110 @@
+//! Post-order / reverse post-order traversals.
+//!
+//! Reverse post-order of a DAG is a topological order — the property
+//! Algorithm 1 relies on for hoisting speculative requests (§5.1.3).
+
+use crate::ir::{BlockId, Function};
+
+/// Post-order over blocks reachable from `entry`, following forward
+/// terminator edges. `skip_edge(from, to)` filters edges (used to ignore
+/// backedges / inner-loop headers).
+pub fn post_order_from(
+    f: &Function,
+    entry: BlockId,
+    skip_edge: &dyn Fn(BlockId, BlockId) -> bool,
+) -> Vec<BlockId> {
+    let n = f.num_blocks();
+    let mut visited = vec![false; n];
+    let mut out = Vec::with_capacity(n);
+    // Iterative DFS with explicit stack of (block, next-succ-index).
+    let mut stack: Vec<(BlockId, usize)> = vec![(entry, 0)];
+    visited[entry.index()] = true;
+    while let Some(&mut (bb, ref mut i)) = stack.last_mut() {
+        let succs = f.succs(bb);
+        if *i < succs.len() {
+            let s = succs[*i];
+            *i += 1;
+            if !visited[s.index()] && !skip_edge(bb, s) {
+                visited[s.index()] = true;
+                stack.push((s, 0));
+            }
+        } else {
+            out.push(bb);
+            stack.pop();
+        }
+    }
+    out
+}
+
+/// Post-order over all blocks reachable from the function entry.
+pub fn post_order(f: &Function) -> Vec<BlockId> {
+    post_order_from(f, f.entry, &|_, _| false)
+}
+
+/// Reverse post-order from the function entry.
+pub fn reverse_post_order(f: &Function) -> Vec<BlockId> {
+    let mut po = post_order(f);
+    po.reverse();
+    po
+}
+
+/// Reverse post-order of the region reachable from `start`, skipping
+/// edges for which `skip_edge` returns true (Algorithm 1's traversal:
+/// skip backedges and edges entering inner-loop headers).
+pub fn reverse_post_order_from(
+    f: &Function,
+    start: BlockId,
+    skip_edge: &dyn Fn(BlockId, BlockId) -> bool,
+) -> Vec<BlockId> {
+    let mut po = post_order_from(f, start, skip_edge);
+    po.reverse();
+    po
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+
+    fn diamond() -> crate::ir::Function {
+        let (_, f) = parse_single(
+            r#"
+func @d(%c: b1) {
+entry:
+  condbr %c, left, right
+left:
+  br join
+right:
+  br join
+join:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        f
+    }
+
+    #[test]
+    fn rpo_of_diamond_is_topological() {
+        let f = diamond();
+        let rpo = reverse_post_order(&f);
+        assert_eq!(rpo.len(), 4);
+        assert_eq!(rpo[0].0, 0, "entry first");
+        assert_eq!(rpo[3].0, 3, "join last");
+        let pos = |b: u32| rpo.iter().position(|x| x.0 == b).unwrap();
+        assert!(pos(0) < pos(1) && pos(0) < pos(2));
+        assert!(pos(1) < pos(3) && pos(2) < pos(3));
+    }
+
+    #[test]
+    fn skip_edges_prunes_region() {
+        let f = diamond();
+        // skip entry->left: region misses `left`
+        let rpo = reverse_post_order_from(&f, crate::ir::BlockId(0), &|from, to| {
+            from.0 == 0 && to.0 == 1
+        });
+        assert!(!rpo.iter().any(|b| b.0 == 1));
+        assert!(rpo.iter().any(|b| b.0 == 3));
+    }
+}

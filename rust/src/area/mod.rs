@@ -1,0 +1,248 @@
+//! Analytical ALM area model, standing in for Quartus place-and-route
+//! (paper §8.1: areas in Adaptive Logic Modules on an Intel Arria 10).
+//!
+//! The model charges:
+//! - per-instruction datapath costs (64-bit adders/comparators ≈ 32
+//!   ALMs, multiplier ALM-equivalent ≈ 150, divider ≈ 600, muxes ≈ 32,
+//!   channel interfaces ≈ 24);
+//! - per-block scheduler/FSM cost (the paper §8.3: "an increased number
+//!   of blocks can result in a higher area usage due to larger scheduler
+//!   complexity" [50]) — `BLOCK_BASE` plus a per-instruction control
+//!   share;
+//! - per-channel FIFO cost (depth × width packed into MLAB-equivalent
+//!   ALMs);
+//! - per-hazard-array LSQ cost (CAM-style store queue: `st_q` entries ×
+//!   per-entry comparators, load queue bookkeeping) — the dominant DAE
+//!   adder, matching Table 1's DAE ≈ 1.16× STA and SPEC ≈ 1.42× STA
+//!   relative areas.
+//!
+//! Constants are calibrated to reproduce Table 1's *relative* areas, not
+//! absolute Arria-10 numbers (we have no Quartus); Fig. 7's trend (< 5%
+//! CU growth per poison block) emerges from `BLOCK_BASE` + poison-call
+//! costs.
+
+use crate::ir::{Function, Module, Op};
+use crate::transform::Compiled;
+
+// datapath costs (ALMs)
+const ADD_SUB: usize = 32;
+const LOGIC: usize = 16;
+const CMP: usize = 20;
+const MUX: usize = 32;
+const MUL: usize = 150;
+const DIV: usize = 600;
+const CHAN_IF: usize = 24;
+const CONST: usize = 0;
+const CAST: usize = 24;
+
+// control costs
+const BLOCK_BASE: usize = 28;
+const INSTR_CTRL: usize = 6;
+/// Accelerator-shell overhead per unit (controller, start/done logic,
+/// host interface share) — the bulk of the paper's STA baseline area.
+const UNIT_BASE: usize = 700;
+
+// memory system (the paper's HLS LSQ [54] is deliberately lightweight)
+const FIFO_BASE: usize = 25;
+const FIFO_PER_SLOT: usize = 2; // 64-bit slot in MLAB-equivalent ALMs
+const LSQ_BASE: usize = 200;
+const LSQ_PER_ST: usize = 6; // allocation entry: address tag + state
+const LSQ_PER_LD: usize = 12;
+const SRAM_PORT: usize = 90; // per-array port/arbitration logic
+/// STA's conservative in-order memory unit per hazard array.
+const IN_ORDER_MEM: usize = 400;
+
+/// Area broken down by unit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AreaEstimate {
+    pub agu: usize,
+    pub cu: usize,
+    pub du: usize,
+    pub total: usize,
+}
+
+fn op_cost(op: &Op) -> usize {
+    use crate::ir::BinOp::*;
+    match op {
+        Op::ConstI(_) | Op::ConstF(_) | Op::ConstB(_) => CONST,
+        Op::IBin(o, ..) | Op::FBin(o, ..) => match o {
+            Mul => MUL,
+            Div | Rem => DIV,
+            Add | Sub | Min | Max => ADD_SUB,
+            _ => LOGIC,
+        },
+        Op::ICmp(..) | Op::FCmp(..) => CMP,
+        Op::Not(_) => 1,
+        Op::Select { .. } => MUX,
+        Op::IToF(_) | Op::FToI(_) => CAST,
+        Op::Phi { .. } => MUX / 2,
+        Op::Load { .. } | Op::Store { .. } => SRAM_PORT / 2,
+        Op::SendLdAddr { .. }
+        | Op::SendStAddr { .. }
+        | Op::ConsumeVal { .. }
+        | Op::ProduceVal { .. }
+        | Op::PoisonVal { .. } => CHAN_IF,
+    }
+}
+
+/// Area of one unit (function slice): datapath + scheduler.
+pub fn function_area(f: &Function) -> usize {
+    let reach = crate::transform::simplify_cfg::reachable_blocks(f);
+    let mut area = UNIT_BASE;
+    for (bi, b) in f.blocks.iter().enumerate() {
+        if !reach[bi] {
+            continue;
+        }
+        area += BLOCK_BASE;
+        for &iid in &b.instrs {
+            area += op_cost(&f.instr(iid).op) + INSTR_CTRL;
+        }
+    }
+    area
+}
+
+/// Hazard arrays (stored anywhere) need an LSQ in the DU; read-only
+/// arrays need only a stream port.
+fn du_area(m: &Module, fs: &[&Function], chan_cap: usize, ld_q: usize, st_q: usize) -> usize {
+    let mut stored = vec![false; m.arrays.len()];
+    for f in fs {
+        for b in &f.blocks {
+            for &iid in &b.instrs {
+                if let Op::SendStAddr { chan, .. } = f.instr(iid).op {
+                    stored[m.chan(chan).arr.index()] = true;
+                }
+            }
+        }
+    }
+    let mut area = 0;
+    for (ai, _) in m.arrays.iter().enumerate() {
+        if stored[ai] {
+            area += LSQ_BASE + st_q * LSQ_PER_ST + ld_q * LSQ_PER_LD;
+        } else {
+            area += SRAM_PORT;
+        }
+    }
+    // channel FIFOs — count only channels the slices still reference
+    // after DCE (pruned consumes delete their stream)
+    let mut used = vec![false; m.chans.len()];
+    for f in fs {
+        for b in &f.blocks {
+            for &iid in &b.instrs {
+                match f.instr(iid).op {
+                    Op::SendLdAddr { chan, .. }
+                    | Op::SendStAddr { chan, .. }
+                    | Op::ConsumeVal { chan, .. }
+                    | Op::ProduceVal { chan, .. }
+                    | Op::PoisonVal { chan, .. } => used[chan.index()] = true,
+                    _ => {}
+                }
+            }
+        }
+    }
+    area += used.iter().filter(|&&u| u).count() * (FIFO_BASE + chan_cap * FIFO_PER_SLOT);
+    area
+}
+
+/// Estimate the accelerator area for a compiled architecture using the
+/// machine configuration's queue sizes.
+pub fn estimate(c: &Compiled, cfg: &crate::sim::MachineConfig) -> AreaEstimate {
+    match c {
+        Compiled::Monolithic { module, .. } => {
+            let f = &module.funcs[0];
+            let mut a = AreaEstimate { cu: function_area(f), ..Default::default() };
+            // STA: in-order disambiguation unit per hazard (stored) array,
+            // plain port otherwise
+            let mut stored = vec![false; module.arrays.len()];
+            for b in &f.blocks {
+                for &iid in &b.instrs {
+                    if let Op::Store { arr, .. } = f.instr(iid).op {
+                        stored[arr.index()] = true;
+                    }
+                }
+            }
+            a.du = stored
+                .iter()
+                .map(|&s| if s { IN_ORDER_MEM } else { SRAM_PORT })
+                .sum();
+            a.total = a.cu + a.du;
+            a
+        }
+        Compiled::Dae { program, .. } => {
+            let agu = program.agu_fn();
+            let cu = program.cu_fn();
+            let mut a = AreaEstimate {
+                agu: function_area(agu),
+                cu: function_area(cu),
+                du: du_area(&program.module, &[agu, cu], cfg.chan_cap, cfg.ld_q, cfg.st_q),
+                ..Default::default()
+            };
+            a.total = a.agu + a.cu + a.du;
+            a
+        }
+    }
+}
+
+/// Paper-style relative area (normalised to a baseline total).
+pub fn relative(a: AreaEstimate, base: AreaEstimate) -> f64 {
+    a.total as f64 / base.total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MachineConfig;
+    use crate::transform::{build, Arch};
+
+    #[test]
+    fn relative_areas_follow_table1_shape() {
+        // DAE > STA (FIFOs + LSQ), SPEC ≥ DAE (poison logic), SPEC ≈ ORACLE
+        let cfg = MachineConfig::default();
+        let w = crate::workloads::build("hist", 3, None).unwrap();
+        let mut areas = std::collections::HashMap::new();
+        for arch in Arch::ALL {
+            let c = build(&w.module, 0, arch).unwrap();
+            areas.insert(arch, estimate(&c, &cfg).total);
+        }
+        assert!(areas[&Arch::Dae] > areas[&Arch::Sta]);
+        // SPEC vs DAE can go either way (paper fw: SPEC 4008 < DAE 4210 —
+        // hoisting deletes AGU blocks while the CU gains poison logic)
+        let sd = areas[&Arch::Spec] as f64 / areas[&Arch::Dae] as f64;
+        assert!((0.7..1.7).contains(&sd), "SPEC/DAE = {sd}");
+        let spec = areas[&Arch::Spec] as f64;
+        let oracle = areas[&Arch::Oracle] as f64;
+        assert!(
+            (spec / oracle - 1.0).abs() < 0.15,
+            "SPEC {} vs ORACLE {} should be close",
+            spec,
+            oracle
+        );
+        // overall inflation sane (paper: SPEC ≈ 1.42× STA harmonic mean)
+        let ratio = spec / areas[&Arch::Sta] as f64;
+        assert!((1.05..2.5).contains(&ratio), "SPEC/STA = {ratio}");
+    }
+
+    #[test]
+    fn poison_blocks_add_modest_cu_area() {
+        // Fig. 7: each poison block adds a few percent of CU area
+        let cfg = MachineConfig::default();
+        let mut prev = None;
+        for levels in [1usize, 4, 8] {
+            let w = crate::workloads::nested::nested(levels, 3);
+            let spec = build(&w.module, 0, Arch::Spec).unwrap();
+            let a = estimate(&spec, &cfg);
+            if let Some(p) = prev {
+                assert!(a.cu >= p, "CU area should grow with nesting");
+            }
+            prev = Some(a.cu);
+        }
+    }
+
+    #[test]
+    fn area_is_deterministic() {
+        let cfg = MachineConfig::default();
+        let w = crate::workloads::build("mm", 5, None).unwrap();
+        let c1 = build(&w.module, 0, Arch::Spec).unwrap();
+        let c2 = build(&w.module, 0, Arch::Spec).unwrap();
+        assert_eq!(estimate(&c1, &cfg).total, estimate(&c2, &cfg).total);
+    }
+}

@@ -1,0 +1,8 @@
+fn main() {
+    let w = dae_spec::workloads::build("sssp", 1, None).unwrap();
+    let spec = dae_spec::transform::build(&w.module, 0, dae_spec::transform::Arch::Spec).unwrap();
+    let cfg = dae_spec::sim::MachineConfig::default();
+    for _ in 0..5 {
+        std::hint::black_box(dae_spec::sim::machine::simulate(&spec, &w.args, w.memory.clone(), &cfg).unwrap());
+    }
+}

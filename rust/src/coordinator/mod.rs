@@ -1,0 +1,173 @@
+//! Experiment coordination: threaded runs across kernels ×
+//! architectures, paper-format reports, and the CLI entrypoint.
+
+pub mod report;
+pub mod runner;
+
+pub use runner::{run_kernel, ExperimentRow};
+
+use crate::util::Args;
+
+const USAGE: &str = "\
+dae-spec — compiler support for speculation in DAE architectures (CC'25 reproduction)
+
+USAGE:
+  dae-spec repro <table1|table2|fig2|fig6|fig7|all> [--seed N]
+  dae-spec run --kernel <name> [--arch sta|dae|spec|oracle] [--seed N]
+               [--misspec R] [--trace]
+  dae-spec compile --kernel <name> [--arch ...]      dump transformed IR
+  dae-spec lsq-sweep [--kernel bfs] [--sizes 4,8,16,32,64]
+  dae-spec list                                      list kernels
+
+Kernels: bfs bc sssp hist thr mm fw sort spmv nested<1-8>
+";
+
+/// CLI dispatcher (kept in the library so it is testable).
+pub fn cli_main(argv: Vec<String>) -> i32 {
+    let args = Args::parse(&argv, &["trace", "no-check"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "repro" => cmd_repro(&args),
+        "run" => cmd_run(&args),
+        "compile" => cmd_compile(&args),
+        "lsq-sweep" => cmd_lsq_sweep(&args),
+        "list" => {
+            for k in crate::workloads::PAPER_KERNELS {
+                println!("{k}");
+            }
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let seed = args.get_u64("seed", 2026);
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    match what {
+        "table1" => report::table1(seed)?,
+        "table2" => report::table2(seed)?,
+        "fig2" => report::fig2(seed)?,
+        "fig6" => report::fig6(seed)?,
+        "fig7" => report::fig7(seed)?,
+        "all" => {
+            report::fig2(seed)?;
+            report::table1(seed)?;
+            report::fig6(seed)?;
+            report::table2(seed)?;
+            report::fig7(seed)?;
+        }
+        other => anyhow::bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let kernel = args.get("kernel").unwrap_or("hist");
+    let seed = args.get_u64("seed", 2026);
+    let misspec = args.get("misspec").and_then(|s| s.parse().ok());
+    let archs = parse_archs(args.get("arch"))?;
+    let mut cfg = crate::sim::MachineConfig::default();
+    cfg.trace = args.has_flag("trace");
+    let row = runner::run_kernel(kernel, seed, misspec, &archs, &cfg, !args.has_flag("no-check"))?;
+    report::print_row(&row);
+    if cfg.trace {
+        for (arch, tr) in &row.traces {
+            println!("\n--- {} pipeline trace (first 50 cycles) ---", arch.name());
+            println!("{}", tr.render(50));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+    let kernel = args.get("kernel").unwrap_or("hist");
+    let seed = args.get_u64("seed", 2026);
+    let archs = parse_archs(args.get("arch"))?;
+    let w = build_workload(kernel, seed, None)?;
+    for arch in archs {
+        let c = crate::transform::build(&w.module, 0, arch)?;
+        println!("==== {} / {} ====", kernel, arch.name());
+        match &c {
+            crate::transform::Compiled::Monolithic { module, .. } => {
+                print!("{}", crate::ir::printer::print_module(module));
+            }
+            crate::transform::Compiled::Dae { program, stats, .. } => {
+                print!("{}", crate::ir::printer::print_module(&program.module));
+                println!(
+                    "// poison blocks: {}  calls: {}  merged: {}  refused: {:?}",
+                    stats.poison_blocks, stats.poison_calls, stats.merged_blocks, stats.refused
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_lsq_sweep(args: &Args) -> anyhow::Result<()> {
+    let kernel = args.get("kernel").unwrap_or("bfs");
+    let seed = args.get_u64("seed", 2026);
+    let sizes: Vec<usize> = args
+        .get("sizes")
+        .unwrap_or("4,8,16,32,64")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    report::lsq_sweep(kernel, seed, &sizes)
+}
+
+pub(crate) fn parse_archs(s: Option<&str>) -> anyhow::Result<Vec<crate::transform::Arch>> {
+    use crate::transform::Arch;
+    match s {
+        None | Some("all") => Ok(Arch::ALL.to_vec()),
+        Some(s) => s
+            .split(',')
+            .map(|a| match a.trim().to_lowercase().as_str() {
+                "sta" => Ok(Arch::Sta),
+                "dae" => Ok(Arch::Dae),
+                "spec" => Ok(Arch::Spec),
+                "oracle" => Ok(Arch::Oracle),
+                other => anyhow::bail!("unknown arch {other}"),
+            })
+            .collect(),
+    }
+}
+
+/// Build a workload by name, supporting `nested<k>`.
+pub fn build_workload(
+    name: &str,
+    seed: u64,
+    misspec: Option<f64>,
+) -> anyhow::Result<crate::workloads::Workload> {
+    if let Some(k) = name.strip_prefix("nested") {
+        let levels: usize = k.parse()?;
+        return Ok(crate::workloads::nested::nested(levels, seed));
+    }
+    crate::workloads::build(name, seed, misspec)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn cli_list_and_help_run() {
+        assert_eq!(super::cli_main(vec!["list".into()]), 0);
+        assert_eq!(super::cli_main(vec![]), 0);
+    }
+
+    #[test]
+    fn parse_archs_variants() {
+        assert_eq!(super::parse_archs(None).unwrap().len(), 4);
+        assert_eq!(super::parse_archs(Some("sta,spec")).unwrap().len(), 2);
+        assert!(super::parse_archs(Some("bogus")).is_err());
+    }
+}

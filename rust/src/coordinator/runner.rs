@@ -1,0 +1,141 @@
+//! Threaded experiment execution: one kernel × N architectures, with
+//! functional cross-checks against the reference interpreter.
+
+use crate::area::{estimate, AreaEstimate};
+use crate::sim::machine::{simulate, SimResult};
+use crate::sim::{interpret, memory_diff, MachineConfig};
+use crate::transform::{build, Arch, Compiled};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// One row of the paper's Table 1: a kernel across architectures.
+pub struct ExperimentRow {
+    pub kernel: String,
+    pub cycles: HashMap<Arch, u64>,
+    pub area: HashMap<Arch, AreaEstimate>,
+    pub misspec_rate: f64,
+    pub poison_blocks: usize,
+    pub poison_calls: usize,
+    pub refused: usize,
+    pub traces: Vec<(Arch, crate::sim::Trace)>,
+}
+
+/// Compile + simulate `kernel` on every architecture in `archs`.
+/// With `check`, assert the final memory matches the reference
+/// interpreter (except ORACLE, which is expected to diverge).
+pub fn run_kernel(
+    kernel: &str,
+    seed: u64,
+    misspec: Option<f64>,
+    archs: &[Arch],
+    cfg: &MachineConfig,
+    check: bool,
+) -> Result<ExperimentRow> {
+    let w = super::build_workload(kernel, seed, misspec)?;
+    let reference = if check {
+        Some(
+            interpret(&w.module, &w.module.funcs[0], &w.args, w.memory.clone(), cfg.max_dyn_instrs)
+                .with_context(|| format!("{kernel}: reference interpreter"))?,
+        )
+    } else {
+        None
+    };
+
+    let mut row = ExperimentRow {
+        kernel: kernel.to_string(),
+        cycles: HashMap::new(),
+        area: HashMap::new(),
+        misspec_rate: 0.0,
+        poison_blocks: 0,
+        poison_calls: 0,
+        refused: 0,
+        traces: Vec::new(),
+    };
+
+    // architectures are independent — run them on scoped threads
+    let results: Vec<(Arch, Result<(Compiled, SimResult)>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = archs
+            .iter()
+            .map(|&arch| {
+                let w = &w;
+                s.spawn(move || -> Result<(Compiled, SimResult)> {
+                    let c = build(&w.module, 0, arch)
+                        .with_context(|| format!("{kernel}/{}", arch.name()))?;
+                    let sim = simulate(&c, &w.args, w.memory.clone(), cfg)
+                        .with_context(|| format!("{kernel}/{}", arch.name()))?;
+                    Ok((c, sim))
+                })
+            })
+            .collect();
+        archs
+            .iter()
+            .zip(handles)
+            .map(|(&a, h)| (a, h.join().expect("sim thread panicked")))
+            .collect()
+    });
+
+    for (arch, res) in results {
+        let (c, mut sim) = res?;
+        if let Some(r) = &reference {
+            let ok = memory_diff(&sim.memory, &r.memory).is_none();
+            if arch != Arch::Oracle && !ok {
+                bail!(
+                    "{kernel}/{}: final memory diverges from reference at {:?}",
+                    arch.name(),
+                    memory_diff(&sim.memory, &r.memory)
+                );
+            }
+        }
+        row.cycles.insert(arch, sim.cycles);
+        row.area.insert(arch, estimate(&c, cfg));
+        if arch == Arch::Spec {
+            row.misspec_rate = sim.misspec_rate;
+            if let Some(stats) = c.stats() {
+                row.poison_blocks = stats.poison_blocks;
+                row.poison_calls = stats.poison_calls;
+                row.refused = stats.refused.len();
+            }
+        }
+        if let Some(tr) = sim.trace.take() {
+            row.traces.push((arch, tr));
+        }
+    }
+    Ok(row)
+}
+
+/// Run a set of kernels in parallel (one thread per kernel).
+pub fn run_suite(
+    kernels: &[&str],
+    seed: u64,
+    archs: &[Arch],
+    cfg: &MachineConfig,
+) -> Result<Vec<ExperimentRow>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = kernels
+            .iter()
+            .map(|&k| s.spawn(move || run_kernel(k, seed, None, archs, cfg, true)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("kernel thread panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_hist_all_archs_checked() {
+        let cfg = MachineConfig::default();
+        let row = run_kernel("hist", 1, None, &Arch::ALL, &cfg, true).unwrap();
+        assert_eq!(row.cycles.len(), 4);
+        assert!(row.poison_calls >= 1);
+        assert!(row.cycles[&Arch::Spec] < row.cycles[&Arch::Sta]);
+    }
+
+    #[test]
+    fn suite_runs_in_parallel() {
+        let cfg = MachineConfig::default();
+        let rows = run_suite(&["hist", "thr"], 1, &[Arch::Sta, Arch::Spec], &cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+    }
+}

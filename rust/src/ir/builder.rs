@@ -1,0 +1,208 @@
+//! Ergonomic function construction, used by the workload definitions and
+//! by tests.
+//!
+//! ```no_run
+//! use dae_spec::ir::{FunctionBuilder, Module, Type, BinOp, CmpOp};
+//!
+//! let mut m = Module::new();
+//! let a = m.add_array("A", Type::I64, 16);
+//! let mut b = FunctionBuilder::new("inc_all");
+//! let n = b.param("n", Type::I64);
+//! let (entry, header, body, exit) = (b.block("entry"), b.block("header"), b.block("body"), b.block("exit"));
+//! b.switch_to(entry);
+//! let zero = b.const_i(0);
+//! b.br(header);
+//! b.switch_to(header);
+//! let i = b.phi(Type::I64);
+//! let c = b.icmp(CmpOp::Lt, i, n);
+//! b.cond_br(c, body, exit);
+//! b.switch_to(body);
+//! let v = b.load(a, i, Type::I64);
+//! let one = b.const_i(1);
+//! let v2 = b.ibin(BinOp::Add, v, one);
+//! b.store(a, i, v2);
+//! let inext = b.ibin(BinOp::Add, i, one);
+//! b.br(header);
+//! b.switch_to(exit);
+//! b.ret();
+//! b.set_phi_incomings(i, vec![(entry, zero), (body, inext)]);
+//! m.funcs.push(b.finish());
+//! ```
+
+use super::ops::{BinOp, CmpOp, Op, Terminator};
+use super::types::Type;
+use super::{ArrayId, BlockId, ChanId, Function, InstrId, ValueDef, ValueId};
+
+pub struct FunctionBuilder {
+    func: Function,
+    cur: Option<BlockId>,
+}
+
+impl FunctionBuilder {
+    pub fn new(name: &str) -> Self {
+        FunctionBuilder { func: Function::new(name), cur: None }
+    }
+
+    pub fn param(&mut self, name: &str, ty: Type) -> ValueId {
+        self.func.add_param(name, ty)
+    }
+
+    pub fn block(&mut self, name: &str) -> BlockId {
+        self.func.new_block(name)
+    }
+
+    pub fn switch_to(&mut self, bb: BlockId) {
+        self.cur = Some(bb);
+    }
+
+    pub fn current(&self) -> BlockId {
+        self.cur.expect("no insertion block set")
+    }
+
+    fn push(&mut self, op: Op) -> Option<ValueId> {
+        let bb = self.current();
+        self.func.push_instr(bb, op)
+    }
+
+    fn pushv(&mut self, op: Op) -> ValueId {
+        self.push(op).expect("op must produce a value")
+    }
+
+    // -- constants ----------------------------------------------------------
+    pub fn const_i(&mut self, x: i64) -> ValueId {
+        self.pushv(Op::ConstI(x))
+    }
+
+    pub fn const_f(&mut self, x: f64) -> ValueId {
+        self.pushv(Op::ConstF(x))
+    }
+
+    pub fn const_b(&mut self, x: bool) -> ValueId {
+        self.pushv(Op::ConstB(x))
+    }
+
+    // -- arithmetic ----------------------------------------------------------
+    pub fn ibin(&mut self, op: BinOp, a: ValueId, b: ValueId) -> ValueId {
+        self.pushv(Op::IBin(op, a, b))
+    }
+
+    pub fn fbin(&mut self, op: BinOp, a: ValueId, b: ValueId) -> ValueId {
+        self.pushv(Op::FBin(op, a, b))
+    }
+
+    pub fn icmp(&mut self, op: CmpOp, a: ValueId, b: ValueId) -> ValueId {
+        self.pushv(Op::ICmp(op, a, b))
+    }
+
+    pub fn fcmp(&mut self, op: CmpOp, a: ValueId, b: ValueId) -> ValueId {
+        self.pushv(Op::FCmp(op, a, b))
+    }
+
+    pub fn not(&mut self, a: ValueId) -> ValueId {
+        self.pushv(Op::Not(a))
+    }
+
+    pub fn select(&mut self, cond: ValueId, t: ValueId, f: ValueId) -> ValueId {
+        let ty = self.func.value(t).ty;
+        self.pushv(Op::Select { cond, t, f, ty })
+    }
+
+    pub fn itof(&mut self, a: ValueId) -> ValueId {
+        self.pushv(Op::IToF(a))
+    }
+
+    pub fn ftoi(&mut self, a: ValueId) -> ValueId {
+        self.pushv(Op::FToI(a))
+    }
+
+    // -- SSA -----------------------------------------------------------------
+    /// Create an empty φ; fill incomings later with
+    /// [`FunctionBuilder::set_phi_incomings`].
+    pub fn phi(&mut self, ty: Type) -> ValueId {
+        self.pushv(Op::Phi { ty, incomings: vec![] })
+    }
+
+    pub fn set_phi_incomings(&mut self, phi: ValueId, inc: Vec<(BlockId, ValueId)>) {
+        let def = self.func.value(phi).def;
+        let ValueDef::Instr(iid) = def else { panic!("phi value is not an instruction") };
+        match &mut self.func.instr_mut(iid).op {
+            Op::Phi { incomings, .. } => *incomings = inc,
+            _ => panic!("set_phi_incomings on non-phi"),
+        }
+    }
+
+    // -- memory ---------------------------------------------------------------
+    pub fn load(&mut self, arr: ArrayId, idx: ValueId, elem: Type) -> ValueId {
+        self.pushv(Op::Load { arr, idx, ty: elem })
+    }
+
+    pub fn store(&mut self, arr: ArrayId, idx: ValueId, val: ValueId) {
+        self.push(Op::Store { arr, idx, val });
+    }
+
+    // -- DAE intrinsics ---------------------------------------------------------
+    pub fn send_ld_addr(&mut self, chan: ChanId, mem: u32, idx: ValueId) {
+        self.push(Op::SendLdAddr { chan, mem, idx });
+    }
+
+    pub fn send_st_addr(&mut self, chan: ChanId, mem: u32, idx: ValueId) {
+        self.push(Op::SendStAddr { chan, mem, idx });
+    }
+
+    pub fn consume_val(&mut self, chan: ChanId, mem: u32, ty: Type) -> ValueId {
+        self.pushv(Op::ConsumeVal { chan, mem, ty })
+    }
+
+    pub fn produce_val(&mut self, chan: ChanId, mem: u32, val: ValueId) {
+        self.push(Op::ProduceVal { chan, mem, val });
+    }
+
+    pub fn poison_val(&mut self, chan: ChanId, mem: u32) {
+        self.push(Op::PoisonVal { chan, mem, pred: None });
+    }
+
+    // -- terminators --------------------------------------------------------------
+    pub fn br(&mut self, target: BlockId) {
+        let bb = self.current();
+        self.func.block_mut(bb).term = Terminator::Br(target);
+    }
+
+    pub fn cond_br(&mut self, cond: ValueId, t: BlockId, f: BlockId) {
+        let bb = self.current();
+        self.func.block_mut(bb).term = Terminator::CondBr { cond, t, f };
+    }
+
+    pub fn ret(&mut self) {
+        let bb = self.current();
+        self.func.block_mut(bb).term = Terminator::Ret;
+    }
+
+    /// Name the result value of the most recent instruction (printer sugar).
+    pub fn name_value(&mut self, v: ValueId, name: &str) {
+        self.func.values[v.index()].name = Some(name.to_string());
+    }
+
+    pub fn func(&self) -> &Function {
+        &self.func
+    }
+
+    pub fn finish(self) -> Function {
+        self.func
+    }
+
+    /// Direct access for tests that need to poke at internals.
+    pub fn func_mut(&mut self) -> &mut Function {
+        &mut self.func
+    }
+
+    /// The instruction id of the last pushed instruction in the current
+    /// block.
+    pub fn last_instr(&self) -> InstrId {
+        *self
+            .func
+            .block(self.current())
+            .instrs
+            .last()
+            .expect("current block has no instructions")
+    }
+}

@@ -1,0 +1,342 @@
+//! A small SSA intermediate representation.
+//!
+//! The IR is deliberately close to what the paper's LLVM passes operate on,
+//! while staying array-based (no raw pointers): memory is a set of named,
+//! statically sized arrays, and `load`/`store` take an array plus an `i64`
+//! index. This matches the paper's `A[idx[i]]`-style irregular kernels and
+//! makes memory disambiguation in the simulated load-store queue exact.
+//!
+//! Design notes:
+//! - Dense `u32` ids everywhere ([`ValueId`], [`BlockId`], [`InstrId`],
+//!   [`ArrayId`], [`ChanId`]) indexing flat arenas — the hot paths
+//!   (simulator, path enumeration) never hash.
+//! - Instructions live in a per-function arena; blocks hold `Vec<InstrId>`
+//!   so the CFG transforms (hoisting, poison-block insertion, merging) are
+//!   cheap id shuffles.
+//! - DAE channel intrinsics are first-class ops so the decoupled slices
+//!   remain verifiable, printable and interpretable IR.
+
+pub mod builder;
+pub mod ops;
+pub mod parser;
+pub mod printer;
+pub mod types;
+pub mod verify;
+
+pub use builder::FunctionBuilder;
+pub use ops::{BinOp, ChanKind, CmpOp, Op, Terminator};
+pub use types::Type;
+
+use std::fmt;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident, $prefix:expr) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            #[inline]
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!($prefix, "{}"), self.0)
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!($prefix, "{}"), self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// Index into [`Function::values`].
+    ValueId, "%v"
+);
+id_type!(
+    /// Index into [`Function::blocks`].
+    BlockId, "bb"
+);
+id_type!(
+    /// Index into [`Function::instrs`].
+    InstrId, "i"
+);
+id_type!(
+    /// Index into [`Module::arrays`].
+    ArrayId, "@a"
+);
+id_type!(
+    /// Index into [`Module::chans`]. One channel per decoupled static
+    /// memory operation and direction (see [`ops::ChanKind`]).
+    ChanId, "ch"
+);
+
+/// How a [`ValueId`] is defined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueDef {
+    /// The n-th function parameter.
+    Param(u32),
+    /// The result of an instruction.
+    Instr(InstrId),
+}
+
+/// Metadata for one SSA value.
+#[derive(Clone, Debug)]
+pub struct ValueInfo {
+    pub def: ValueDef,
+    pub ty: Type,
+    /// Optional source-level name, used by the printer (`%name`).
+    pub name: Option<String>,
+}
+
+/// One instruction in the arena. Detached instructions (removed from a
+/// block by DCE or hoisting without being re-inserted) simply stop being
+/// referenced; the arena is never compacted.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub op: Op,
+    /// `Some` iff the op produces a value.
+    pub result: Option<ValueId>,
+}
+
+/// A basic block: straight-line instructions plus one terminator.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub name: String,
+    pub instrs: Vec<InstrId>,
+    pub term: Terminator,
+}
+
+/// A declared memory array (the unit of disambiguation in the LSQ).
+#[derive(Clone, Debug)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub elem: Type,
+    pub size: usize,
+}
+
+/// A FIFO channel connecting two units of the decoupled machine.
+///
+/// Channels are declared at module level so the AGU and CU slices (two
+/// separate functions) can refer to the same channel.
+#[derive(Clone, Debug)]
+pub struct ChanDecl {
+    pub kind: ChanKind,
+    /// Array this channel's requests/values refer to. Each (array, kind)
+    /// pair has at most one channel: all static memory ops on the same
+    /// array share one request stream and one value stream — which is
+    /// exactly why the paper's ordering problem (§2) exists. Individual
+    /// static ops are identified by the `mem` tag on the intrinsics.
+    pub arr: ArrayId,
+}
+
+/// A function: parameters, an entry block, and arenas of blocks,
+/// instructions and values.
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<ValueId>,
+    pub blocks: Vec<Block>,
+    pub instrs: Vec<Instr>,
+    pub values: Vec<ValueInfo>,
+    pub entry: BlockId,
+}
+
+impl Default for Function {
+    fn default() -> Self {
+        Function {
+            name: String::new(),
+            params: Vec::new(),
+            blocks: Vec::new(),
+            instrs: Vec::new(),
+            values: Vec::new(),
+            entry: BlockId(0),
+        }
+    }
+}
+
+/// A module: arrays + channels + functions.
+///
+/// The original program is a single function; after decoupling (§3.2) the
+/// module holds the `agu` and `cu` slices plus the shared channel table.
+#[derive(Clone, Debug, Default)]
+pub struct Module {
+    pub arrays: Vec<ArrayDecl>,
+    pub chans: Vec<ChanDecl>,
+    pub funcs: Vec<Function>,
+}
+
+impl Module {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_array(&mut self, name: &str, elem: Type, size: usize) -> ArrayId {
+        let id = ArrayId(self.arrays.len() as u32);
+        self.arrays.push(ArrayDecl { name: name.to_string(), elem, size });
+        id
+    }
+
+    /// Get or create the channel for `(kind, arr)`.
+    pub fn add_chan(&mut self, kind: ChanKind, arr: ArrayId) -> ChanId {
+        if let Some(i) = self.chans.iter().position(|c| c.kind == kind && c.arr == arr) {
+            return ChanId(i as u32);
+        }
+        let id = ChanId(self.chans.len() as u32);
+        self.chans.push(ChanDecl { kind, arr });
+        id
+    }
+
+    pub fn array(&self, id: ArrayId) -> &ArrayDecl {
+        &self.arrays[id.index()]
+    }
+
+    pub fn chan(&self, id: ChanId) -> &ChanDecl {
+        &self.chans[id.index()]
+    }
+
+    pub fn func_by_name(&self, name: &str) -> Option<&Function> {
+        self.funcs.iter().find(|f| f.name == name)
+    }
+}
+
+impl Function {
+    pub fn new(name: &str) -> Self {
+        Function { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn add_param(&mut self, name: &str, ty: Type) -> ValueId {
+        let idx = self.params.len() as u32;
+        let v = self.new_value(ValueDef::Param(idx), ty, Some(name.to_string()));
+        self.params.push(v);
+        v
+    }
+
+    pub fn new_value(&mut self, def: ValueDef, ty: Type, name: Option<String>) -> ValueId {
+        let id = ValueId(self.values.len() as u32);
+        self.values.push(ValueInfo { def, ty, name });
+        id
+    }
+
+    pub fn new_block(&mut self, name: &str) -> BlockId {
+        let id = BlockId(self.blocks.len() as u32);
+        self.blocks.push(Block {
+            name: name.to_string(),
+            instrs: Vec::new(),
+            term: Terminator::Unterminated,
+        });
+        id
+    }
+
+    /// Append a fresh instruction to `bb`, returning its result value (if
+    /// the op produces one).
+    pub fn push_instr(&mut self, bb: BlockId, op: Op) -> Option<ValueId> {
+        let iid = self.create_instr(op);
+        self.blocks[bb.index()].instrs.push(iid);
+        self.instrs[iid.index()].result
+    }
+
+    /// Create an instruction in the arena without inserting it anywhere.
+    pub fn create_instr(&mut self, op: Op) -> InstrId {
+        let iid = InstrId(self.instrs.len() as u32);
+        let result = op
+            .result_type()
+            .map(|ty| self.new_value(ValueDef::Instr(iid), ty, None));
+        self.instrs.push(Instr { op, result });
+        iid
+    }
+
+    pub fn instr(&self, id: InstrId) -> &Instr {
+        &self.instrs[id.index()]
+    }
+
+    pub fn instr_mut(&mut self, id: InstrId) -> &mut Instr {
+        &mut self.instrs[id.index()]
+    }
+
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id.index()]
+    }
+
+    pub fn block_mut(&mut self, id: BlockId) -> &mut Block {
+        &mut self.blocks[id.index()]
+    }
+
+    pub fn value(&self, id: ValueId) -> &ValueInfo {
+        &self.values[id.index()]
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Successors of a block (0, 1 or 2).
+    pub fn succs(&self, bb: BlockId) -> Vec<BlockId> {
+        self.blocks[bb.index()].term.succs()
+    }
+
+    /// Predecessor lists for every block. O(V+E); recompute after CFG edits.
+    pub fn preds(&self) -> Vec<Vec<BlockId>> {
+        let mut preds = vec![Vec::new(); self.blocks.len()];
+        for (i, b) in self.blocks.iter().enumerate() {
+            for s in b.term.succs() {
+                preds[s.index()].push(BlockId(i as u32));
+            }
+        }
+        preds
+    }
+
+    /// The block that contains `iid`, if any (linear scan; fine off the
+    /// hot path, transforms cache their own maps).
+    pub fn block_of_instr(&self, iid: InstrId) -> Option<BlockId> {
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.instrs.contains(&iid) {
+                return Some(BlockId(i as u32));
+            }
+        }
+        None
+    }
+
+    /// Split the `from -> to` CFG edge, inserting and returning a fresh
+    /// block. Rewrites `from`'s terminator and `to`'s φ incoming labels.
+    pub fn split_edge(&mut self, from: BlockId, to: BlockId, name: &str) -> BlockId {
+        let nb = self.new_block(name);
+        self.blocks[nb.index()].term = Terminator::Br(to);
+        self.blocks[from.index()].term.replace_succ(to, nb);
+        // φs in `to` that named `from` as an incoming block now arrive via
+        // `nb`.
+        let to_instrs = self.blocks[to.index()].instrs.clone();
+        for iid in to_instrs {
+            if let Op::Phi { incomings: ref mut inc, .. } = self.instrs[iid.index()].op {
+                for (bb, _) in inc.iter_mut() {
+                    if *bb == from {
+                        *bb = nb;
+                    }
+                }
+            }
+        }
+        nb
+    }
+
+    /// Replace every use of `old` with `new` in all instructions and
+    /// terminators.
+    pub fn replace_all_uses(&mut self, old: ValueId, new: ValueId) {
+        for instr in &mut self.instrs {
+            instr.op.replace_use(old, new);
+        }
+        for b in &mut self.blocks {
+            if let Terminator::CondBr { cond, .. } = &mut b.term {
+                if *cond == old {
+                    *cond = new;
+                }
+            }
+        }
+    }
+}

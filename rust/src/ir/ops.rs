@@ -1,0 +1,251 @@
+//! Instruction opcodes, terminators and channel kinds.
+
+use super::{ArrayId, BlockId, ChanId, Type, ValueId};
+
+/// Binary arithmetic / bitwise ops. Integer and float variants share
+/// opcodes; the operand type disambiguates (verified by `verify`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Min,
+    Max,
+}
+
+/// Comparison predicates (signed for I64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Direction/meaning of a DAE channel. One decoupled static load becomes a
+/// `LdAddr` channel (AGU→DU) plus a `LdVal` channel (DU→CU) and, when the
+/// AGU itself needs the value (LoD), a `LdValAgu` channel (DU→AGU). One
+/// decoupled static store becomes a `StAddr` (AGU→DU) plus `StVal`
+/// (CU→DU) pair; the store value carries the poison bit (§3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ChanKind {
+    LdAddr,
+    StAddr,
+    LdVal,
+    LdValAgu,
+    StVal,
+}
+
+/// Instruction opcodes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    // -- constants ---------------------------------------------------------
+    ConstI(i64),
+    ConstF(f64),
+    ConstB(bool),
+
+    // -- arithmetic --------------------------------------------------------
+    /// Integer binary op (operands + result I64).
+    IBin(BinOp, ValueId, ValueId),
+    /// Float binary op (operands + result F64).
+    FBin(BinOp, ValueId, ValueId),
+    /// Integer compare → B1.
+    ICmp(CmpOp, ValueId, ValueId),
+    /// Float compare → B1.
+    FCmp(CmpOp, ValueId, ValueId),
+    /// Boolean negate.
+    Not(ValueId),
+    /// `select cond, a, b` — result type `ty`.
+    Select { cond: ValueId, t: ValueId, f: ValueId, ty: Type },
+    /// Int → float.
+    IToF(ValueId),
+    /// Float → int (truncating).
+    FToI(ValueId),
+
+    // -- SSA ---------------------------------------------------------------
+    /// φ node — result type `ty`, incoming `(pred block, value)` pairs.
+    Phi { ty: Type, incomings: Vec<(BlockId, ValueId)> },
+
+    // -- memory (pre-decoupling) --------------------------------------------
+    /// `ty` is the element type of `arr` (denormalised here so
+    /// `result_type` needs no module context).
+    Load { arr: ArrayId, idx: ValueId, ty: Type },
+    Store { arr: ArrayId, idx: ValueId, val: ValueId },
+
+    // -- DAE channel intrinsics (§3.2) ---------------------------------------
+    /// AGU: send a load request for `arr[idx]` on `chan`. `mem` tags the
+    /// originating static memory op (bookkeeping/stats only; the FIFO
+    /// stream is shared per array, which is exactly why the paper's
+    /// ordering problem exists).
+    SendLdAddr { chan: ChanId, mem: u32, idx: ValueId },
+    /// AGU: send a store request for `arr[idx]` on `chan`.
+    SendStAddr { chan: ChanId, mem: u32, idx: ValueId },
+    /// CU / AGU: pop the next value from `chan` (a `LdVal`/`LdValAgu`
+    /// channel). Result type = element type of the channel's array.
+    ConsumeVal { chan: ChanId, mem: u32, ty: Type },
+    /// CU: push the next store value on `chan`, poison bit clear.
+    ProduceVal { chan: ChanId, mem: u32, val: ValueId },
+    /// CU: push a poisoned store value on `chan` — the DU drops the
+    /// matching store request without committing (§3.1). `pred` is an
+    /// optional steering predicate (Algorithm 3 case 2): when present and
+    /// false at runtime, the poison is a no-op (the paper's steering
+    /// branches, expressed as predication — §9 notes the equivalence with
+    /// GPU predication).
+    PoisonVal { chan: ChanId, mem: u32, pred: Option<ValueId> },
+}
+
+impl Op {
+    /// The result type, or `None` for void ops.
+    pub fn result_type(&self) -> Option<Type> {
+        match self {
+            Op::ConstI(_) => Some(Type::I64),
+            Op::ConstF(_) => Some(Type::F64),
+            Op::ConstB(_) => Some(Type::B1),
+            Op::IBin(..) => Some(Type::I64),
+            Op::FBin(..) => Some(Type::F64),
+            Op::ICmp(..) | Op::FCmp(..) | Op::Not(_) => Some(Type::B1),
+            Op::Select { ty, .. } => Some(*ty),
+            Op::IToF(_) => Some(Type::F64),
+            Op::FToI(_) => Some(Type::I64),
+            Op::Phi { ty, .. } => Some(*ty),
+            Op::Load { ty, .. } => Some(*ty),
+            Op::Store { .. } => None,
+            Op::SendLdAddr { .. } | Op::SendStAddr { .. } => None,
+            Op::ConsumeVal { ty, .. } => Some(*ty),
+            Op::ProduceVal { .. } | Op::PoisonVal { .. } => None,
+        }
+    }
+
+    /// Is this a memory request op as seen by the AGU (paper Alg. 1 hoists
+    /// these)?
+    pub fn is_send(&self) -> bool {
+        matches!(self, Op::SendLdAddr { .. } | Op::SendStAddr { .. })
+    }
+
+    pub fn is_memory(&self) -> bool {
+        matches!(self, Op::Load { .. } | Op::Store { .. })
+    }
+
+    /// Value operands read by this op (φ incomings included).
+    pub fn uses(&self) -> Vec<ValueId> {
+        match self {
+            Op::ConstI(_) | Op::ConstF(_) | Op::ConstB(_) => vec![],
+            Op::IBin(_, a, b) | Op::FBin(_, a, b) | Op::ICmp(_, a, b) | Op::FCmp(_, a, b) => {
+                vec![*a, *b]
+            }
+            Op::Not(a) | Op::IToF(a) | Op::FToI(a) => vec![*a],
+            Op::Select { cond, t, f, .. } => vec![*cond, *t, *f],
+            Op::Phi { incomings, .. } => incomings.iter().map(|(_, v)| *v).collect(),
+            Op::Load { idx, .. } => vec![*idx],
+            Op::Store { idx, val, .. } => vec![*idx, *val],
+            Op::SendLdAddr { idx, .. } | Op::SendStAddr { idx, .. } => vec![*idx],
+            Op::ConsumeVal { .. } => vec![],
+            Op::ProduceVal { val, .. } => vec![*val],
+            Op::PoisonVal { pred, .. } => pred.iter().copied().collect(),
+        }
+    }
+
+    /// Replace uses of `old` with `new`.
+    pub fn replace_use(&mut self, old: ValueId, new: ValueId) {
+        let r = |v: &mut ValueId| {
+            if *v == old {
+                *v = new;
+            }
+        };
+        match self {
+            Op::ConstI(_) | Op::ConstF(_) | Op::ConstB(_) => {}
+            Op::IBin(_, a, b) | Op::FBin(_, a, b) | Op::ICmp(_, a, b) | Op::FCmp(_, a, b) => {
+                r(a);
+                r(b);
+            }
+            Op::Not(a) | Op::IToF(a) | Op::FToI(a) => r(a),
+            Op::Select { cond, t, f, .. } => {
+                r(cond);
+                r(t);
+                r(f);
+            }
+            Op::Phi { incomings, .. } => {
+                for (_, v) in incomings.iter_mut() {
+                    r(v);
+                }
+            }
+            Op::Load { idx, .. } => r(idx),
+            Op::Store { idx, val, .. } => {
+                r(idx);
+                r(val);
+            }
+            Op::SendLdAddr { idx, .. } | Op::SendStAddr { idx, .. } => r(idx),
+            Op::ConsumeVal { .. } => {}
+            Op::ProduceVal { val, .. } => r(val),
+            Op::PoisonVal { .. } => {}
+        }
+    }
+
+    /// Does the op have side effects (must not be removed by DCE)?
+    pub fn has_side_effect(&self) -> bool {
+        matches!(
+            self,
+            Op::Store { .. }
+                | Op::SendLdAddr { .. }
+                | Op::SendStAddr { .. }
+                | Op::ConsumeVal { .. }
+                | Op::ProduceVal { .. }
+                | Op::PoisonVal { .. }
+        )
+    }
+}
+
+/// Block terminators.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Terminator {
+    /// Freshly created block; the verifier rejects this.
+    Unterminated,
+    Br(BlockId),
+    CondBr { cond: ValueId, t: BlockId, f: BlockId },
+    Ret,
+}
+
+impl Terminator {
+    pub fn succs(&self) -> Vec<BlockId> {
+        match self {
+            Terminator::Unterminated | Terminator::Ret => vec![],
+            Terminator::Br(b) => vec![*b],
+            Terminator::CondBr { t, f, .. } => {
+                if t == f {
+                    vec![*t]
+                } else {
+                    vec![*t, *f]
+                }
+            }
+        }
+    }
+
+    /// Retarget the `old` successor to `new`.
+    pub fn replace_succ(&mut self, old: BlockId, new: BlockId) {
+        match self {
+            Terminator::Br(b) => {
+                if *b == old {
+                    *b = new;
+                }
+            }
+            Terminator::CondBr { t, f, .. } => {
+                if *t == old {
+                    *t = new;
+                }
+                if *f == old {
+                    *f = new;
+                }
+            }
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,581 @@
+//! Recursive-descent parser for the textual IR format emitted by
+//! [`super::printer`]. Used by golden tests and by workloads that prefer
+//! source-level definitions over builder calls.
+
+use super::ops::{BinOp, ChanKind, CmpOp, Op, Terminator};
+use super::types::Type;
+use super::{ArrayId, BlockId, ChanId, Function, Module, ValueId};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+pub fn parse_module(src: &str) -> Result<Module> {
+    Parser::new(src).module()
+}
+
+/// Parse a module containing exactly one function; convenience for tests.
+pub fn parse_single(src: &str) -> Result<(Module, Function)> {
+    let mut m = parse_module(src)?;
+    if m.funcs.len() != 1 {
+        bail!("expected exactly one function, got {}", m.funcs.len());
+    }
+    let f = m.funcs.pop().unwrap();
+    Ok((m, f))
+}
+
+struct Parser<'a> {
+    lines: Vec<&'a str>,
+    pos: usize,
+}
+
+/// Pending φ operands: value names are resolved after the whole body is
+/// parsed (forward references).
+struct PendingPhi {
+    instr_idx: usize, // into func.instrs
+    incomings: Vec<(String, String)>, // (block name, value name)
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Self {
+        let lines = src
+            .lines()
+            .map(|l| {
+                // strip comments
+                match l.find("//") {
+                    Some(i) => &l[..i],
+                    None => l,
+                }
+            })
+            .map(str::trim)
+            .collect();
+        Parser { lines, pos: 0 }
+    }
+
+    fn peek(&self) -> Option<&'a str> {
+        self.lines[self.pos..].iter().copied().find(|l| !l.is_empty())
+    }
+
+    fn next_line(&mut self) -> Option<&'a str> {
+        while self.pos < self.lines.len() {
+            let l = self.lines[self.pos];
+            self.pos += 1;
+            if !l.is_empty() {
+                return Some(l);
+            }
+        }
+        None
+    }
+
+    fn module(&mut self) -> Result<Module> {
+        let mut m = Module::new();
+        let mut arrays: HashMap<String, ArrayId> = HashMap::new();
+        while let Some(l) = self.peek() {
+            if l.starts_with("array") {
+                let l = self.next_line().unwrap();
+                // array @A : f64[100]
+                let rest = l.strip_prefix("array").unwrap().trim();
+                let (name, rest) = rest
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("bad array decl: {l}"))?;
+                let name = name.trim().trim_start_matches('@').to_string();
+                let rest = rest.trim();
+                let (ty_s, size_s) = rest
+                    .split_once('[')
+                    .ok_or_else(|| anyhow!("bad array decl: {l}"))?;
+                let ty = parse_type(ty_s.trim())?;
+                let size: usize = size_s
+                    .trim_end_matches(']')
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad array size in: {l}"))?;
+                let id = m.add_array(&name, ty, size);
+                arrays.insert(name, id);
+            } else if l.starts_with("chan") {
+                let l = self.next_line().unwrap();
+                // chan ch0 : st_addr @A mem3
+                let rest = l.strip_prefix("chan").unwrap().trim();
+                let (_name, rest) =
+                    rest.split_once(':').ok_or_else(|| anyhow!("bad chan decl: {l}"))?;
+                let toks: Vec<&str> = rest.split_whitespace().collect();
+                if toks.len() != 2 {
+                    bail!("bad chan decl: {l}");
+                }
+                let kind = parse_chankind(toks[0])?;
+                let arr = *arrays
+                    .get(toks[1].trim_start_matches('@'))
+                    .ok_or_else(|| anyhow!("unknown array in chan decl: {l}"))?;
+                m.add_chan(kind, arr);
+            } else if l.starts_with("func") {
+                let f = self.function(&m, &arrays)?;
+                m.funcs.push(f);
+            } else {
+                bail!("unexpected line: {l}");
+            }
+        }
+        Ok(m)
+    }
+
+    fn function(&mut self, m: &Module, arrays: &HashMap<String, ArrayId>) -> Result<Function> {
+        let header = self.next_line().unwrap();
+        // func @name(%a: i64, %b: f64) {
+        let rest = header.strip_prefix("func").unwrap().trim();
+        let open = rest.find('(').ok_or_else(|| anyhow!("bad func header: {header}"))?;
+        let name = rest[..open].trim().trim_start_matches('@').to_string();
+        let close = rest.rfind(')').ok_or_else(|| anyhow!("bad func header: {header}"))?;
+        let params_s = &rest[open + 1..close];
+        let mut f = Function::new(&name);
+        let mut values: HashMap<String, ValueId> = HashMap::new();
+        for p in params_s.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (pn, pt) = p.split_once(':').ok_or_else(|| anyhow!("bad param: {p}"))?;
+            let pn = pn.trim().trim_start_matches('%');
+            let v = f.add_param(pn, parse_type(pt.trim())?);
+            values.insert(pn.to_string(), v);
+        }
+
+        // First pass over the body: collect block names so branches can
+        // forward-reference.
+        let body_start = self.pos;
+        let mut blocks: HashMap<String, BlockId> = HashMap::new();
+        let mut depth = 0usize;
+        for i in self.pos..self.lines.len() {
+            let l = self.lines[i];
+            if l.is_empty() {
+                continue;
+            }
+            if l.ends_with('{') {
+                depth += 1;
+            }
+            if l == "}" {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+                continue;
+            }
+            if l.ends_with(':') && !l.contains(' ') {
+                let bn = l.trim_end_matches(':').to_string();
+                let id = f.new_block(&bn);
+                blocks.insert(bn, id);
+            }
+        }
+        self.pos = body_start;
+
+        let mut cur: Option<BlockId> = None;
+        let mut pending_phis: Vec<PendingPhi> = Vec::new();
+        loop {
+            let l = self
+                .next_line()
+                .ok_or_else(|| anyhow!("unexpected EOF in function @{name}"))?;
+            if l == "}" {
+                break;
+            }
+            if l.ends_with(':') && !l.contains(' ') {
+                cur = Some(blocks[l.trim_end_matches(':')]);
+                continue;
+            }
+            let bb = cur.ok_or_else(|| anyhow!("instruction before first block: {l}"))?;
+            self.instr_line(l, m, arrays, &blocks, &mut values, &mut pending_phis, &mut f, bb)?;
+        }
+
+        // Resolve φ operands now that every value name is known.
+        for p in pending_phis {
+            let mut inc = Vec::with_capacity(p.incomings.len());
+            for (bn, vn) in p.incomings {
+                let bb = *blocks
+                    .get(&bn)
+                    .ok_or_else(|| anyhow!("phi references unknown block {bn}"))?;
+                let v = *values
+                    .get(&vn)
+                    .ok_or_else(|| anyhow!("phi references unknown value %{vn}"))?;
+                inc.push((bb, v));
+            }
+            match &mut f.instrs[p.instr_idx].op {
+                Op::Phi { incomings, .. } => *incomings = inc,
+                _ => unreachable!(),
+            }
+        }
+        Ok(f)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn instr_line(
+        &mut self,
+        l: &str,
+        m: &Module,
+        arrays: &HashMap<String, ArrayId>,
+        blocks: &HashMap<String, BlockId>,
+        values: &mut HashMap<String, ValueId>,
+        pending_phis: &mut Vec<PendingPhi>,
+        f: &mut Function,
+        bb: BlockId,
+    ) -> Result<()> {
+        // terminators
+        if let Some(t) = l.strip_prefix("br ") {
+            let target = *blocks
+                .get(t.trim())
+                .ok_or_else(|| anyhow!("unknown block: {t}"))?;
+            f.block_mut(bb).term = Terminator::Br(target);
+            return Ok(());
+        }
+        if let Some(t) = l.strip_prefix("condbr ") {
+            let parts: Vec<&str> = t.split(',').map(str::trim).collect();
+            if parts.len() != 3 {
+                bail!("bad condbr: {l}");
+            }
+            let cond = lookup(values, parts[0])?;
+            let tb = *blocks.get(parts[1]).ok_or_else(|| anyhow!("unknown block {}", parts[1]))?;
+            let fb = *blocks.get(parts[2]).ok_or_else(|| anyhow!("unknown block {}", parts[2]))?;
+            f.block_mut(bb).term = Terminator::CondBr { cond, t: tb, f: fb };
+            return Ok(());
+        }
+        if l == "ret" {
+            f.block_mut(bb).term = Terminator::Ret;
+            return Ok(());
+        }
+
+        // `%res = op ...` or bare side-effect op
+        let (res_name, rhs) = match l.split_once('=') {
+            Some((lhs, rhs)) if lhs.trim_start().starts_with('%') => {
+                (Some(lhs.trim().trim_start_matches('%').to_string()), rhs.trim())
+            }
+            _ => (None, l),
+        };
+
+        let (opname, rest) = match rhs.split_once(char::is_whitespace) {
+            Some((a, b)) => (a, b.trim()),
+            None => (rhs, ""),
+        };
+
+        let op: Op = if opname == "phi" {
+            // phi i64 [bb: %v], [bb2: %w]
+            let (ty_s, inc_s) = rest
+                .split_once(char::is_whitespace)
+                .ok_or_else(|| anyhow!("bad phi: {l}"))?;
+            let ty = parse_type(ty_s)?;
+            let mut incomings = Vec::new();
+            for part in split_brackets(inc_s) {
+                let inner = part.trim().trim_start_matches('[').trim_end_matches(']');
+                let (bn, vn) = inner.split_once(':').ok_or_else(|| anyhow!("bad phi arm: {part}"))?;
+                incomings.push((bn.trim().to_string(), vn.trim().trim_start_matches('%').to_string()));
+            }
+            let iid = f.create_instr(Op::Phi { ty, incomings: vec![] });
+            f.blocks[bb.index()].instrs.push(iid);
+            pending_phis.push(PendingPhi { instr_idx: iid.index(), incomings });
+            if let Some(r) = f.instrs[iid.index()].result {
+                if let Some(n) = res_name {
+                    f.values[r.index()].name = Some(n.clone());
+                    values.insert(n, r);
+                }
+            }
+            return Ok(());
+        } else if opname == "const.i" {
+            Op::ConstI(rest.parse()?)
+        } else if opname == "const.f" {
+            Op::ConstF(rest.parse()?)
+        } else if opname == "const.b" {
+            Op::ConstB(rest.parse()?)
+        } else if let Some(o) = opname.strip_suffix(".i").and_then(parse_binop) {
+            let (a, b) = two_operands(values, rest)?;
+            Op::IBin(o, a, b)
+        } else if let Some(o) = opname.strip_suffix(".f").and_then(parse_binop) {
+            let (a, b) = two_operands(values, rest)?;
+            Op::FBin(o, a, b)
+        } else if let Some(c) = opname.strip_prefix("icmp.") {
+            let (a, b) = two_operands(values, rest)?;
+            Op::ICmp(parse_cmpop(c)?, a, b)
+        } else if let Some(c) = opname.strip_prefix("fcmp.") {
+            let (a, b) = two_operands(values, rest)?;
+            Op::FCmp(parse_cmpop(c)?, a, b)
+        } else if opname == "not" {
+            Op::Not(lookup(values, rest)?)
+        } else if opname == "itof" {
+            Op::IToF(lookup(values, rest)?)
+        } else if opname == "ftoi" {
+            Op::FToI(lookup(values, rest)?)
+        } else if opname == "select" {
+            let parts: Vec<&str> = rest.split(',').map(str::trim).collect();
+            if parts.len() != 3 {
+                bail!("bad select: {l}");
+            }
+            let cond = lookup(values, parts[0])?;
+            let t = lookup(values, parts[1])?;
+            let fv = lookup(values, parts[2])?;
+            let ty = f.value(t).ty;
+            Op::Select { cond, t, f: fv, ty }
+        } else if opname == "load" {
+            // load @A[%i]
+            let (arr, idx) = parse_mem_ref(values, arrays, rest)?;
+            let ty = m.array(arr).elem;
+            Op::Load { arr, idx, ty }
+        } else if opname == "store" {
+            // store @A[%i], %v
+            let (mem, val_s) = rest
+                .rsplit_once(',')
+                .ok_or_else(|| anyhow!("bad store: {l}"))?;
+            let (arr, idx) = parse_mem_ref(values, arrays, mem.trim())?;
+            let val = lookup(values, val_s.trim())?;
+            Op::Store { arr, idx, val }
+        } else if opname == "send_ld_addr" || opname == "send_st_addr" {
+            let (c, i) = rest.split_once(',').ok_or_else(|| anyhow!("bad send: {l}"))?;
+            let (chan, mem) = parse_chan_mem(c.trim())?;
+            let idx = lookup(values, i.trim())?;
+            if opname == "send_ld_addr" {
+                Op::SendLdAddr { chan, mem, idx }
+            } else {
+                Op::SendStAddr { chan, mem, idx }
+            }
+        } else if opname == "consume_val" {
+            let (chan, mem) = parse_chan_mem(rest.trim())?;
+            let ty = m.array(m.chan(chan).arr).elem;
+            Op::ConsumeVal { chan, mem, ty }
+        } else if opname == "produce_val" {
+            let (c, v) = rest.split_once(',').ok_or_else(|| anyhow!("bad produce: {l}"))?;
+            let (chan, mem) = parse_chan_mem(c.trim())?;
+            Op::ProduceVal { chan, mem, val: lookup(values, v.trim())? }
+        } else if opname == "poison_val" {
+            // `poison_val ch0:m1` or `poison_val ch0:m1 if %flag`
+            let (cm, pred) = match rest.split_once(" if ") {
+                Some((cm, p)) => (cm.trim(), Some(lookup(values, p.trim())?)),
+                None => (rest.trim(), None),
+            };
+            let (chan, mem) = parse_chan_mem(cm)?;
+            Op::PoisonVal { chan, mem, pred }
+        } else {
+            bail!("unknown op: {l}");
+        };
+
+        let iid = f.create_instr(op);
+        f.blocks[bb.index()].instrs.push(iid);
+        if let Some(r) = f.instrs[iid.index()].result {
+            if let Some(n) = res_name {
+                f.values[r.index()].name = Some(n.clone());
+                values.insert(n, r);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn lookup(values: &HashMap<String, ValueId>, s: &str) -> Result<ValueId> {
+    let name = s.trim().trim_start_matches('%');
+    values
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown value %{name}"))
+}
+
+fn two_operands(values: &HashMap<String, ValueId>, rest: &str) -> Result<(ValueId, ValueId)> {
+    let (a, b) = rest
+        .split_once(',')
+        .ok_or_else(|| anyhow!("expected two operands: {rest}"))?;
+    Ok((lookup(values, a)?, lookup(values, b)?))
+}
+
+fn parse_mem_ref(
+    values: &HashMap<String, ValueId>,
+    arrays: &HashMap<String, ArrayId>,
+    s: &str,
+) -> Result<(ArrayId, ValueId)> {
+    // @A[%i]
+    let s = s.trim().trim_start_matches('@');
+    let open = s.find('[').ok_or_else(|| anyhow!("bad memory ref: {s}"))?;
+    let arr = *arrays
+        .get(&s[..open])
+        .ok_or_else(|| anyhow!("unknown array @{}", &s[..open]))?;
+    let idx = lookup(values, s[open + 1..].trim_end_matches(']'))?;
+    Ok((arr, idx))
+}
+
+/// Parse `ch0:m3` (channel + static-mem-op tag). A bare `ch0` gets tag 0.
+fn parse_chan_mem(s: &str) -> Result<(ChanId, u32)> {
+    let (c, m) = match s.split_once(':') {
+        Some((c, m)) => (c, m.strip_prefix('m').ok_or_else(|| anyhow!("bad mem tag: {s}"))?),
+        None => (s, "0"),
+    };
+    let chan = ChanId(
+        c.strip_prefix("ch")
+            .ok_or_else(|| anyhow!("bad channel: {s}"))?
+            .parse()?,
+    );
+    Ok((chan, m.parse()?))
+}
+
+fn parse_type(s: &str) -> Result<Type> {
+    match s {
+        "i64" => Ok(Type::I64),
+        "f64" => Ok(Type::F64),
+        "b1" => Ok(Type::B1),
+        _ => bail!("unknown type: {s}"),
+    }
+}
+
+fn parse_binop(s: &str) -> Option<BinOp> {
+    Some(match s {
+        "add" => BinOp::Add,
+        "sub" => BinOp::Sub,
+        "mul" => BinOp::Mul,
+        "div" => BinOp::Div,
+        "rem" => BinOp::Rem,
+        "and" => BinOp::And,
+        "or" => BinOp::Or,
+        "xor" => BinOp::Xor,
+        "shl" => BinOp::Shl,
+        "shr" => BinOp::Shr,
+        "min" => BinOp::Min,
+        "max" => BinOp::Max,
+        _ => return None,
+    })
+}
+
+fn parse_cmpop(s: &str) -> Result<CmpOp> {
+    Ok(match s {
+        "eq" => CmpOp::Eq,
+        "ne" => CmpOp::Ne,
+        "lt" => CmpOp::Lt,
+        "le" => CmpOp::Le,
+        "gt" => CmpOp::Gt,
+        "ge" => CmpOp::Ge,
+        _ => bail!("unknown cmp op: {s}"),
+    })
+}
+
+fn parse_chankind(s: &str) -> Result<ChanKind> {
+    Ok(match s {
+        "ld_addr" => ChanKind::LdAddr,
+        "st_addr" => ChanKind::StAddr,
+        "ld_val" => ChanKind::LdVal,
+        "ld_val_agu" => ChanKind::LdValAgu,
+        "st_val" => ChanKind::StVal,
+        _ => bail!("unknown chan kind: {s}"),
+    })
+}
+
+/// Split `"[a: b], [c: d]"` into bracketed chunks.
+fn split_brackets(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => {
+                if depth == 0 {
+                    start = i;
+                }
+                depth += 1;
+            }
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    out.push(&s[start..=i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_module;
+
+    const HIST: &str = r#"
+array @A : i64[100]
+array @idx : i64[100]
+
+func @hist(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [body_end: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %w = load @idx[%i]
+  %a = load @A[%w]
+  %czero = const.i 0
+  %p = icmp.gt %a, %czero
+  condbr %p, then, body_end
+then:
+  %c1 = const.i 1
+  %a2 = add.i %a, %c1
+  store @A[%w], %a2
+  br body_end
+body_end:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#;
+
+    #[test]
+    fn parse_hist() {
+        let (m, f) = parse_single(HIST).unwrap();
+        assert_eq!(m.arrays.len(), 2);
+        assert_eq!(f.blocks.len(), 6);
+        assert_eq!(f.params.len(), 1);
+        // the φ has two incomings
+        let phis: Vec<_> = f
+            .instrs
+            .iter()
+            .filter(|i| matches!(i.op, Op::Phi { .. }))
+            .collect();
+        assert_eq!(phis.len(), 1);
+    }
+
+    #[test]
+    fn roundtrip_hist() {
+        let mut m = parse_module(HIST).unwrap();
+        let printed = print_module(&m);
+        let m2 = parse_module(&printed).unwrap();
+        let printed2 = print_module(&m2);
+        assert_eq!(printed, printed2, "print->parse->print must be stable");
+        // keep m alive for borrowck clarity
+        m.funcs.clear();
+    }
+
+    #[test]
+    fn parse_dae_intrinsics() {
+        let src = r#"
+array @A : i64[8]
+chan ch0 : st_addr @A
+chan ch1 : st_val @A
+
+func @agu(%n: i64) {
+entry:
+  %c0 = const.i 0
+  send_st_addr ch0:m0, %c0
+  ret
+}
+
+func @cu(%n: i64) {
+entry:
+  %c7 = const.i 7
+  produce_val ch1:m0, %c7
+  poison_val ch1:m0
+  ret
+}
+"#;
+        let m = parse_module(src).unwrap();
+        assert_eq!(m.funcs.len(), 2);
+        assert_eq!(m.chans.len(), 2);
+        let printed = print_module(&m);
+        let m2 = parse_module(&printed).unwrap();
+        assert_eq!(print_module(&m2), printed);
+    }
+
+    #[test]
+    fn errors_on_unknown_value() {
+        let src = r#"
+func @f() {
+entry:
+  %x = add.i %nope, %nope
+  ret
+}
+"#;
+        assert!(parse_module(src).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Textual IR emission. The format round-trips through [`super::parser`]
+//! and is used for golden tests and debugging dumps.
+//!
+//! ```text
+//! array @A : f64[100]
+//! chan ch0 : st_addr @A mem3
+//!
+//! func @hist(%n: i64) {
+//! entry:
+//!   %c0 = const.i 0
+//!   br header
+//! header:
+//!   %i = phi i64 [entry: %c0], [body: %inext]
+//!   ...
+//! }
+//! ```
+
+use super::ops::{BinOp, ChanKind, CmpOp, Op, Terminator};
+use super::{Function, Module, ValueId};
+use std::fmt::Write;
+
+pub fn binop_str(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "add",
+        BinOp::Sub => "sub",
+        BinOp::Mul => "mul",
+        BinOp::Div => "div",
+        BinOp::Rem => "rem",
+        BinOp::And => "and",
+        BinOp::Or => "or",
+        BinOp::Xor => "xor",
+        BinOp::Shl => "shl",
+        BinOp::Shr => "shr",
+        BinOp::Min => "min",
+        BinOp::Max => "max",
+    }
+}
+
+pub fn cmpop_str(op: CmpOp) -> &'static str {
+    match op {
+        CmpOp::Eq => "eq",
+        CmpOp::Ne => "ne",
+        CmpOp::Lt => "lt",
+        CmpOp::Le => "le",
+        CmpOp::Gt => "gt",
+        CmpOp::Ge => "ge",
+    }
+}
+
+pub fn chankind_str(k: ChanKind) -> &'static str {
+    match k {
+        ChanKind::LdAddr => "ld_addr",
+        ChanKind::StAddr => "st_addr",
+        ChanKind::LdVal => "ld_val",
+        ChanKind::LdValAgu => "ld_val_agu",
+        ChanKind::StVal => "st_val",
+    }
+}
+
+/// Printable name for a value: `%name` if it has one, else `%vN`.
+fn vname(f: &Function, v: ValueId) -> String {
+    match &f.value(v).name {
+        Some(n) => format!("%{n}"),
+        None => format!("%v{}", v.0),
+    }
+}
+
+pub fn print_function(m: &Module, f: &Function) -> String {
+    let mut s = String::new();
+    let params: Vec<String> = f
+        .params
+        .iter()
+        .map(|&p| format!("{}: {}", vname(f, p), f.value(p).ty))
+        .collect();
+    let _ = writeln!(s, "func @{}({}) {{", f.name, params.join(", "));
+    for (bi, b) in f.blocks.iter().enumerate() {
+        let _ = writeln!(s, "{}:", b.name);
+        for &iid in &b.instrs {
+            let instr = f.instr(iid);
+            let lhs = instr.result.map(|r| format!("{} = ", vname(f, r))).unwrap_or_default();
+            let rhs = print_op(m, f, &instr.op);
+            let _ = writeln!(s, "  {lhs}{rhs}");
+        }
+        let term = match &b.term {
+            Terminator::Unterminated => "<unterminated>".to_string(),
+            Terminator::Br(t) => format!("br {}", f.block(*t).name),
+            Terminator::CondBr { cond, t, f: fb } => format!(
+                "condbr {}, {}, {}",
+                vname(f, *cond),
+                f.block(*t).name,
+                f.block(*fb).name
+            ),
+            Terminator::Ret => "ret".to_string(),
+        };
+        let _ = writeln!(s, "  {term}");
+        if bi + 1 != f.blocks.len() {
+            // nothing between blocks
+        }
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+pub fn print_op(m: &Module, f: &Function, op: &Op) -> String {
+    match op {
+        Op::ConstI(x) => format!("const.i {x}"),
+        Op::ConstF(x) => format!("const.f {x:?}"),
+        Op::ConstB(x) => format!("const.b {x}"),
+        Op::IBin(o, a, b) => format!("{}.i {}, {}", binop_str(*o), vname(f, *a), vname(f, *b)),
+        Op::FBin(o, a, b) => format!("{}.f {}, {}", binop_str(*o), vname(f, *a), vname(f, *b)),
+        Op::ICmp(o, a, b) => format!("icmp.{} {}, {}", cmpop_str(*o), vname(f, *a), vname(f, *b)),
+        Op::FCmp(o, a, b) => format!("fcmp.{} {}, {}", cmpop_str(*o), vname(f, *a), vname(f, *b)),
+        Op::Not(a) => format!("not {}", vname(f, *a)),
+        Op::Select { cond, t, f: fv, .. } => {
+            format!("select {}, {}, {}", vname(f, *cond), vname(f, *t), vname(f, *fv))
+        }
+        Op::IToF(a) => format!("itof {}", vname(f, *a)),
+        Op::FToI(a) => format!("ftoi {}", vname(f, *a)),
+        Op::Phi { ty, incomings } => {
+            let inc: Vec<String> = incomings
+                .iter()
+                .map(|(bb, v)| format!("[{}: {}]", f.block(*bb).name, vname(f, *v)))
+                .collect();
+            format!("phi {ty} {}", inc.join(", "))
+        }
+        Op::Load { arr, idx, .. } => {
+            format!("load @{}[{}]", m.array(*arr).name, vname(f, *idx))
+        }
+        Op::Store { arr, idx, val } => format!(
+            "store @{}[{}], {}",
+            m.array(*arr).name,
+            vname(f, *idx),
+            vname(f, *val)
+        ),
+        Op::SendLdAddr { chan, mem, idx } => {
+            format!("send_ld_addr {chan}:m{mem}, {}", vname(f, *idx))
+        }
+        Op::SendStAddr { chan, mem, idx } => {
+            format!("send_st_addr {chan}:m{mem}, {}", vname(f, *idx))
+        }
+        Op::ConsumeVal { chan, mem, .. } => format!("consume_val {chan}:m{mem}"),
+        Op::ProduceVal { chan, mem, val } => {
+            format!("produce_val {chan}:m{mem}, {}", vname(f, *val))
+        }
+        Op::PoisonVal { chan, mem, pred } => match pred {
+            Some(p) => format!("poison_val {chan}:m{mem} if {}", vname(f, *p)),
+            None => format!("poison_val {chan}:m{mem}"),
+        },
+    }
+}
+
+pub fn print_module(m: &Module) -> String {
+    let mut s = String::new();
+    for a in &m.arrays {
+        let _ = writeln!(s, "array @{} : {}[{}]", a.name, a.elem, a.size);
+    }
+    for (i, c) in m.chans.iter().enumerate() {
+        let _ = writeln!(s, "chan ch{} : {} @{}", i, chankind_str(c.kind), m.array(c.arr).name);
+    }
+    if !m.arrays.is_empty() || !m.chans.is_empty() {
+        let _ = writeln!(s);
+    }
+    for f in &m.funcs {
+        s.push_str(&print_function(m, f));
+        let _ = writeln!(s);
+    }
+    s
+}

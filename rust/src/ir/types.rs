@@ -1,0 +1,98 @@
+//! Value types. The IR is intentionally small: 64-bit integers (also used
+//! for addresses/indices), 64-bit floats, and booleans (branch conditions,
+//! predicates, poison bits).
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Type {
+    I64,
+    F64,
+    B1,
+}
+
+impl Type {
+    pub fn is_numeric(self) -> bool {
+        matches!(self, Type::I64 | Type::F64)
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::I64 => write!(f, "i64"),
+            Type::F64 => write!(f, "f64"),
+            Type::B1 => write!(f, "b1"),
+        }
+    }
+}
+
+/// A runtime value (interpreter + simulator).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Val {
+    I(i64),
+    F(f64),
+    B(bool),
+}
+
+impl Val {
+    pub fn ty(self) -> Type {
+        match self {
+            Val::I(_) => Type::I64,
+            Val::F(_) => Type::F64,
+            Val::B(_) => Type::B1,
+        }
+    }
+
+    pub fn as_i(self) -> i64 {
+        match self {
+            Val::I(x) => x,
+            Val::F(x) => x as i64,
+            Val::B(b) => b as i64,
+        }
+    }
+
+    pub fn as_f(self) -> f64 {
+        match self {
+            Val::I(x) => x as f64,
+            Val::F(x) => x,
+            Val::B(b) => b as u8 as f64,
+        }
+    }
+
+    pub fn as_b(self) -> bool {
+        match self {
+            Val::I(x) => x != 0,
+            Val::F(x) => x != 0.0,
+            Val::B(b) => b,
+        }
+    }
+
+    /// Bit-exact equality for memory comparison (NaN == NaN).
+    pub fn bits_eq(self, other: Val) -> bool {
+        match (self, other) {
+            (Val::I(a), Val::I(b)) => a == b,
+            (Val::F(a), Val::F(b)) => a.to_bits() == b.to_bits(),
+            (Val::B(a), Val::B(b)) => a == b,
+            _ => false,
+        }
+    }
+
+    pub fn zero(ty: Type) -> Val {
+        match ty {
+            Type::I64 => Val::I(0),
+            Type::F64 => Val::F(0.0),
+            Type::B1 => Val::B(false),
+        }
+    }
+}
+
+impl fmt::Display for Val {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Val::I(x) => write!(f, "{x}"),
+            Val::F(x) => write!(f, "{x}"),
+            Val::B(b) => write!(f, "{b}"),
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! `dae_spec` — compiler support for speculation in Decoupled Access/Execute
+//! (DAE) architectures, a full reproduction of Szafarczyk et al., CC '25.
+//!
+//! The crate is organised as a classic compiler + machine-model stack:
+//!
+//! - [`ir`] — a small SSA intermediate representation with array-based
+//!   memory operations and DAE channel intrinsics (`send_ld_addr`,
+//!   `send_st_addr`, `consume_val`, `produce_val`, `poison`).
+//! - [`analysis`] — dominators, post-dominators, control dependence, loop
+//!   info, reachability, def-use chains, and the paper's
+//!   loss-of-decoupling (LoD) analysis (§4).
+//! - [`transform`] — the decoupling transformation (§3.2) and the paper's
+//!   core contribution: Algorithm 1 (speculative hoisting in the AGU),
+//!   Algorithms 2 + 3 (poison placement in the CU), poison-block merging
+//!   (§5.3) and speculative load consumption (§5.4).
+//! - [`sim`] — a cycle-level timing model of the DAE machine (AGU/DU/CU,
+//!   FIFOs, dual-ported SRAM, load-store queue) plus a statically
+//!   scheduled (STA) baseline and a functional interpreter.
+//! - [`area`] — an analytical ALM area model standing in for Quartus.
+//! - [`workloads`] — the nine paper benchmarks, data generators, and the
+//!   Fig. 7 nested-if template.
+//! - [`coordinator`] — experiment orchestration: configs, threaded runs,
+//!   paper-format reports.
+//! - [`runtime`] — PJRT-backed execution of AOT-compiled JAX/Pallas
+//!   artifacts and the vectorised speculation engine (paper §10 future
+//!   work).
+//! - [`util`] — PRNG, mini CLI, bench + property-test harnesses (the
+//!   offline build has no clap/criterion/proptest).
+
+pub mod analysis;
+pub mod area;
+pub mod coordinator;
+pub mod ir;
+pub mod runtime;
+pub mod sim;
+pub mod transform;
+pub mod util;
+pub mod workloads;

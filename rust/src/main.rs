@@ -1,0 +1,9 @@
+//! `dae-spec` CLI — leader entrypoint.
+//!
+//! Subcommands are registered in [`dae_spec::coordinator::cli_main`]; this
+//! file stays thin so the whole surface is testable as a library.
+
+fn main() {
+    let code = dae_spec::coordinator::cli_main(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

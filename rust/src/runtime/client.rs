@@ -1,0 +1,120 @@
+//! Thin wrapper over the `xla` crate: load HLO text produced by
+//! `python/compile/aot.py`, compile once on the PJRT CPU client, execute
+//! from the Rust hot path.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax
+//! ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$DAE_SPEC_ARTIFACTS`, else
+/// `<repo>/artifacts` relative to the current dir or its parents.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("DAE_SPEC_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled model variant.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Load an artifact by stem name (`<artifacts>/<name>.hlo.txt`).
+    pub fn load_artifact(&self, name: &str) -> Result<Executable> {
+        let dir = artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts` first"))?;
+        self.load_hlo_text(&dir.join(format!("{name}.hlo.txt")))
+            .with_context(|| format!("loading artifact {name}"))
+    }
+}
+
+impl Executable {
+    /// Execute with i64 vector inputs; returns all outputs as i64 vectors
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run_i64(&self, inputs: &[&[i64]]) -> Result<Vec<Vec<i64>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|x| {
+                xla::Literal::vec1(x)
+                    .reshape(&[x.len() as i64])
+                    .map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let tuple = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<i64>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Compile-and-run path is exercised end-to-end in
+    /// `rust/tests/runtime.rs` (needs `make artifacts`); here we only
+    /// check client bring-up and artifact discovery plumbing.
+    #[test]
+    fn cpu_client_boots() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT-backed execution of AOT-compiled JAX/Pallas artifacts, and the
+//! vectorised-speculation engine (paper §10 future work: "filling a
+//! vector of speculative requests in the AGU and producing a store mask
+//! in the CU").
+//!
+//! Python runs only at build time (`make artifacts` → `python/compile/`):
+//! the L2 JAX models (calling the L1 Pallas kernels) are lowered once to
+//! HLO *text* under `artifacts/`; this module loads and executes them via
+//! the PJRT CPU client (`xla` crate). Nothing here imports Python.
+
+pub mod client;
+pub mod vector_spec;
+
+pub use client::{artifacts_dir, Executable, PjrtRuntime};
+pub use vector_spec::{VectorSpecEngine, VectorSpecStats};

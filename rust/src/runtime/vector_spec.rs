@@ -1,0 +1,132 @@
+//! Vectorised speculation — the paper's §10 future work, built as a
+//! first-class runtime feature: the AGU side issues a *vector* of
+//! speculative requests per batch, the XLA-compiled compute (L2 JAX + L1
+//! Pallas, AOT'd to `artifacts/`) produces per-lane store values plus a
+//! **store mask** (the vector analogue of the poison bit), and the DU
+//! side applies a masked scatter.
+//!
+//! Correctness subtlety the scalar machine gets for free: within one
+//! batch, gathered guard/operand values are stale with respect to
+//! earlier lanes of the *same* batch (intra-batch RAW). Lanes whose
+//! target address collides with any earlier lane in the batch are
+//! detected and replayed serially — the vector unit's equivalent of an
+//! LSQ hazard (reported in [`VectorSpecStats::conflict_lanes`]).
+
+use super::client::{Executable, PjrtRuntime};
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VectorSpecStats {
+    pub batches: u64,
+    pub lanes: u64,
+    /// Lanes whose store was masked off (the vector "poison").
+    pub masked_lanes: u64,
+    /// Lanes replayed serially due to intra-batch address collisions.
+    pub conflict_lanes: u64,
+}
+
+/// Engine wrapping one AOT-compiled step function.
+pub struct VectorSpecEngine {
+    exe: Executable,
+    pub batch: usize,
+    pub stats: VectorSpecStats,
+}
+
+impl VectorSpecEngine {
+    pub fn new(rt: &PjrtRuntime, artifact: &str, batch: usize) -> Result<Self> {
+        Ok(VectorSpecEngine {
+            exe: rt.load_artifact(artifact)?,
+            batch,
+            stats: VectorSpecStats::default(),
+        })
+    }
+
+    /// Vectorised `hist`: `if (H[d[i]] < CAP) H[d[i]] += 1` over all of
+    /// `d`, batching the guarded update through the XLA step function
+    /// (inputs: H, idx-batch; outputs: new values, keep mask).
+    pub fn run_hist(&mut self, h: &mut [i64], d: &[i64], cap: i64) -> Result<()> {
+        let b = self.batch;
+        let mut i = 0;
+        while i < d.len() {
+            let hi = (i + b).min(d.len());
+            let idx = &d[i..hi];
+            // pad the final partial batch (the artifact has a fixed lane
+            // count; padding lanes target a scratch replay below)
+            let mut padded: Vec<i64> = idx.to_vec();
+            padded.resize(b, -1);
+            // intra-batch conflict detection: a lane colliding with any
+            // earlier lane reads a stale gather — replay serially
+            let mut conflict = vec![false; padded.len()];
+            for l in 0..idx.len() {
+                for e in 0..l {
+                    if padded[e] == padded[l] {
+                        conflict[l] = true;
+                        break;
+                    }
+                }
+            }
+            // speculative vector request: gather+compute+mask via XLA
+            let clamped: Vec<i64> =
+                padded.iter().map(|&x| x.clamp(0, h.len() as i64 - 1)).collect();
+            let outs = self.exe.run_i64(&[h, &clamped])?;
+            let (vals, mask) = (&outs[0], &outs[1]);
+            for l in 0..idx.len() {
+                self.stats.lanes += 1;
+                if conflict[l] {
+                    // serial replay (vector-LSQ hazard)
+                    self.stats.conflict_lanes += 1;
+                    let t = idx[l] as usize;
+                    if h[t] < cap {
+                        h[t] += 1;
+                    } else {
+                        self.stats.masked_lanes += 1;
+                    }
+                } else if mask[l] != 0 {
+                    h[idx[l] as usize] = vals[l];
+                } else {
+                    self.stats.masked_lanes += 1; // vector poison
+                }
+            }
+            self.stats.batches += 1;
+            i = hi;
+        }
+        Ok(())
+    }
+
+    /// Vectorised `thr`: zero R/G/B lanes whose sum exceeds the
+    /// threshold; the mask output is the store mask for all three arrays.
+    pub fn run_thr(
+        &mut self,
+        r: &mut [i64],
+        g: &mut [i64],
+        b_arr: &mut [i64],
+    ) -> Result<()> {
+        let b = self.batch;
+        let n = r.len();
+        let mut i = 0;
+        while i < n {
+            let hi = (i + b).min(n);
+            let mut rr: Vec<i64> = r[i..hi].to_vec();
+            let mut gg: Vec<i64> = g[i..hi].to_vec();
+            let mut bb: Vec<i64> = b_arr[i..hi].to_vec();
+            rr.resize(b, 0);
+            gg.resize(b, 0);
+            bb.resize(b, 0);
+            let outs = self.exe.run_i64(&[&rr, &gg, &bb])?;
+            let mask = &outs[0];
+            for l in 0..(hi - i) {
+                self.stats.lanes += 1;
+                if mask[l] != 0 {
+                    r[i + l] = 0;
+                    g[i + l] = 0;
+                    b_arr[i + l] = 0;
+                } else {
+                    self.stats.masked_lanes += 1;
+                }
+            }
+            self.stats.batches += 1;
+            i = hi;
+        }
+        Ok(())
+    }
+}

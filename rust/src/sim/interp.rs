@@ -1,0 +1,315 @@
+//! Functional reference interpreter for *monolithic* functions — the
+//! golden semantics every architecture's final memory is compared
+//! against (ORACLE is asserted to diverge on adversarial inputs).
+
+use super::Memory;
+use crate::ir::types::Val;
+use crate::ir::{BinOp, BlockId, CmpOp, Function, Module, Op, Terminator};
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct InterpResult {
+    pub memory: Memory,
+    /// Dynamic instruction count.
+    pub dyn_instrs: u64,
+    /// Dynamic executions per static memory op (`mem` id order follows
+    /// layout order, matching `decouple`).
+    pub mem_exec_counts: Vec<u64>,
+    /// Trip counts per block.
+    pub block_counts: Vec<u64>,
+    /// Committed stores in program order: (mem id, address, value).
+    pub store_log: Vec<(u32, i64, crate::ir::types::Val)>,
+}
+
+pub fn eval_ibin(op: BinOp, a: i64, b: i64) -> i64 {
+    match op {
+        BinOp::Add => a.wrapping_add(b),
+        BinOp::Sub => a.wrapping_sub(b),
+        BinOp::Mul => a.wrapping_mul(b),
+        BinOp::Div => {
+            if b == 0 {
+                0
+            } else {
+                a.wrapping_div(b)
+            }
+        }
+        BinOp::Rem => {
+            if b == 0 {
+                0
+            } else {
+                a.wrapping_rem(b)
+            }
+        }
+        BinOp::And => a & b,
+        BinOp::Or => a | b,
+        BinOp::Xor => a ^ b,
+        BinOp::Shl => a.wrapping_shl(b as u32),
+        BinOp::Shr => a.wrapping_shr(b as u32),
+        BinOp::Min => a.min(b),
+        BinOp::Max => a.max(b),
+    }
+}
+
+pub fn eval_fbin(op: BinOp, a: f64, b: f64) -> f64 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Rem => a % b,
+        BinOp::Min => a.min(b),
+        BinOp::Max => a.max(b),
+        _ => f64::NAN,
+    }
+}
+
+pub fn eval_icmp(op: CmpOp, a: i64, b: i64) -> bool {
+    match op {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+    }
+}
+
+pub fn eval_fcmp(op: CmpOp, a: f64, b: f64) -> bool {
+    match op {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+    }
+}
+
+/// Clamp an index into `[0, size)` — speculative loads may compute
+/// addresses on never-taken paths; hardware discards them, we clamp
+/// (documented in DESIGN.md; the *functional* result of a clamped
+/// speculative load is never architecturally used).
+pub fn clamp_idx(idx: i64, size: usize) -> usize {
+    idx.clamp(0, size.saturating_sub(1) as i64) as usize
+}
+
+/// Interpret `f` over `args` and an initial memory image.
+pub fn interpret(
+    m: &Module,
+    f: &Function,
+    args: &[Val],
+    mut memory: Memory,
+    max_instrs: u64,
+) -> Result<InterpResult> {
+    if args.len() != f.params.len() {
+        bail!("@{}: expected {} args, got {}", f.name, f.params.len(), args.len());
+    }
+    let mut env: Vec<Option<Val>> = vec![None; f.values.len()];
+    for (i, &p) in f.params.iter().enumerate() {
+        env[p.index()] = Some(args[i]);
+    }
+
+    // mem ids in layout order (must match decouple::decouple)
+    let mut mem_ids: Vec<Option<u32>> = vec![None; f.instrs.len()];
+    let mut n_mem = 0u32;
+    for b in &f.blocks {
+        for &iid in &b.instrs {
+            if f.instr(iid).op.is_memory() {
+                mem_ids[iid.index()] = Some(n_mem);
+                n_mem += 1;
+            }
+        }
+    }
+    let mut mem_exec_counts = vec![0u64; n_mem as usize];
+    let mut block_counts = vec![0u64; f.num_blocks()];
+    let mut store_log: Vec<(u32, i64, Val)> = Vec::new();
+
+    let mut cur = f.entry;
+    let mut prev: Option<BlockId> = None;
+    let mut dyn_instrs = 0u64;
+
+    loop {
+        block_counts[cur.index()] += 1;
+        // φs evaluate atomically on entry
+        let block = &f.blocks[cur.index()];
+        let mut phi_updates: Vec<(usize, Val)> = Vec::new();
+        for &iid in &block.instrs {
+            let instr = f.instr(iid);
+            if let Op::Phi { incomings, .. } = &instr.op {
+                let pb = prev.expect("φ in entry block");
+                let (_, v) = incomings
+                    .iter()
+                    .find(|(bb, _)| *bb == pb)
+                    .unwrap_or_else(|| panic!("φ has no incoming for {pb} in {}", block.name));
+                let val = env[v.index()].expect("φ operand undefined");
+                phi_updates.push((instr.result.unwrap().index(), val));
+            } else {
+                break;
+            }
+        }
+        for (vi, val) in phi_updates {
+            env[vi] = Some(val);
+        }
+
+        for &iid in &block.instrs {
+            let instr = f.instr(iid);
+            dyn_instrs += 1;
+            if dyn_instrs > max_instrs {
+                bail!("@{}: exceeded {} dynamic instructions", f.name, max_instrs);
+            }
+            let get = |v: crate::ir::ValueId| env[v.index()].expect("use of undefined value");
+            let result: Option<Val> = match &instr.op {
+                Op::Phi { .. } => continue, // handled above
+                Op::ConstI(x) => Some(Val::I(*x)),
+                Op::ConstF(x) => Some(Val::F(*x)),
+                Op::ConstB(x) => Some(Val::B(*x)),
+                Op::IBin(o, a, b) => Some(Val::I(eval_ibin(*o, get(*a).as_i(), get(*b).as_i()))),
+                Op::FBin(o, a, b) => Some(Val::F(eval_fbin(*o, get(*a).as_f(), get(*b).as_f()))),
+                Op::ICmp(o, a, b) => Some(Val::B(eval_icmp(*o, get(*a).as_i(), get(*b).as_i()))),
+                Op::FCmp(o, a, b) => Some(Val::B(eval_fcmp(*o, get(*a).as_f(), get(*b).as_f()))),
+                Op::Not(a) => Some(Val::B(!get(*a).as_b())),
+                Op::Select { cond, t, f: fv, .. } => {
+                    Some(if get(*cond).as_b() { get(*t) } else { get(*fv) })
+                }
+                Op::IToF(a) => Some(Val::F(get(*a).as_i() as f64)),
+                Op::FToI(a) => Some(Val::I(get(*a).as_f() as i64)),
+                Op::Load { arr, idx, .. } => {
+                    mem_exec_counts[mem_ids[iid.index()].unwrap() as usize] += 1;
+                    let a = &memory[arr.index()];
+                    let i = get(*idx).as_i();
+                    if i < 0 || i as usize >= a.len() {
+                        bail!(
+                            "@{}: load @{}[{i}] out of bounds (size {})",
+                            f.name,
+                            m.array(*arr).name,
+                            a.len()
+                        );
+                    }
+                    Some(a[i as usize])
+                }
+                Op::Store { arr, idx, val } => {
+                    let mem_id = mem_ids[iid.index()].unwrap();
+                    mem_exec_counts[mem_id as usize] += 1;
+                    let i = get(*idx).as_i();
+                    let v = get(*val);
+                    store_log.push((mem_id, i, v));
+                    let a = &mut memory[arr.index()];
+                    if i < 0 || i as usize >= a.len() {
+                        bail!(
+                            "@{}: store @{}[{i}] out of bounds (size {})",
+                            f.name,
+                            m.array(*arr).name,
+                            a.len()
+                        );
+                    }
+                    a[i as usize] = v;
+                    None
+                }
+                op @ (Op::SendLdAddr { .. }
+                | Op::SendStAddr { .. }
+                | Op::ConsumeVal { .. }
+                | Op::ProduceVal { .. }
+                | Op::PoisonVal { .. }) => {
+                    bail!("@{}: channel op {op:?} in monolithic interpreter", f.name)
+                }
+            };
+            if let (Some(r), Some(v)) = (instr.result, result) {
+                env[r.index()] = Some(v);
+            }
+        }
+
+        match &block.term {
+            Terminator::Br(t) => {
+                prev = Some(cur);
+                cur = *t;
+            }
+            Terminator::CondBr { cond, t, f: fb } => {
+                let c = env[cond.index()].expect("undefined branch condition").as_b();
+                prev = Some(cur);
+                cur = if c { *t } else { *fb };
+            }
+            Terminator::Ret => {
+                return Ok(InterpResult { memory, dyn_instrs, mem_exec_counts, block_counts, store_log })
+            }
+            Terminator::Unterminated => bail!("unterminated block in @{}", f.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+
+    #[test]
+    fn interprets_hist_like_loop() {
+        let (m, f) = parse_single(
+            r#"
+array @A : i64[8]
+array @idx : i64[8]
+
+func @k(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %fv = add.i %aw, %c1
+  store @A[%w], %fv
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let mut mem = super::super::zero_memory(&m);
+        // A = [1, -1, 1, -1, ...]; idx = [0, 1, 2, ...] reversed
+        for i in 0..8 {
+            mem[0][i] = Val::I(if i % 2 == 0 { 1 } else { -1 });
+            mem[1][i] = Val::I((7 - i) as i64);
+        }
+        let r = interpret(&m, &f, &[Val::I(8)], mem, 1_000_000).unwrap();
+        // for even i (A[i] = 1 > 0): A[7-i] += 1. i=0→A[7]+=1, i=2→A[5]+=1,
+        // i=4→A[3]+=1, i=6→A[1]+=1. A[1] was -1 → 0; A[3] -1→0; etc.
+        assert_eq!(r.memory[0][7], Val::I(0)); // was -1, +1
+        assert_eq!(r.memory[0][5], Val::I(0));
+        assert_eq!(r.memory[0][0], Val::I(1)); // untouched
+        assert_eq!(r.mem_exec_counts.len(), 4);
+        assert_eq!(r.mem_exec_counts[0], 8); // guard load every iter
+        assert_eq!(r.mem_exec_counts[3], 4); // store on even iters
+    }
+
+    #[test]
+    fn bounds_error_detected() {
+        let (m, f) = parse_single(
+            r#"
+array @A : i64[4]
+func @k() {
+entry:
+  %c9 = const.i 9
+  %v = load @A[%c9]
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let mem = super::super::zero_memory(&m);
+        assert!(interpret(&m, &f, &[], mem, 1000).is_err());
+    }
+}

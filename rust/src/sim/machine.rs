@@ -1,0 +1,990 @@
+//! The DAE machine: functional co-simulation of AGU + DU + CU (or the
+//! single STA unit) with timestamp-dataflow timing. See `sim/mod.rs` for
+//! the model description.
+
+use super::interp::{clamp_idx, eval_fbin, eval_fcmp, eval_ibin, eval_icmp};
+use super::trace::Trace;
+use super::{MachineConfig, Memory};
+use crate::ir::types::Val;
+use crate::ir::{ArrayId, BlockId, ChanKind, Function, Module, Op, Terminator};
+use crate::transform::{Arch, Compiled};
+use anyhow::{anyhow, bail, Result};
+use crate::util::FxHashMap;
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+pub struct SimResult {
+    /// Total cycles: the latest timestamp of any event in the machine.
+    pub cycles: u64,
+    pub memory: Memory,
+    pub dyn_instrs: u64,
+    pub stores_committed: u64,
+    pub stores_poisoned: u64,
+    /// Store requests on speculated static ops.
+    pub spec_store_reqs: u64,
+    /// Poisons / speculative store requests (0 when nothing speculated).
+    pub misspec_rate: f64,
+    /// Per static op: (requests, poisons).
+    pub per_mem: FxHashMap<u32, (u64, u64)>,
+    pub trace: Option<Trace>,
+    /// Committed stores in per-array stream order: (mem, addr, value).
+    pub commit_log: Vec<(u32, i64, Val)>,
+}
+
+// ---------------------------------------------------------------------------
+// channels
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Key {
+    /// AGU → DU request stream (per array; loads + stores interleaved).
+    Req(ArrayId),
+    /// CU → DU store-value stream (per array — the ordering problem).
+    StVal(ArrayId),
+    /// DU → CU load-value sub-stream (per static op).
+    LdVal(ArrayId, u32),
+    /// DU → AGU load-value sub-stream (per static op).
+    LdValAgu(ArrayId, u32),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Elem {
+    val: Val,
+    poison: bool,
+    mem: u32,
+    is_store: bool,
+    /// Arrival time at the consumer.
+    t: u64,
+}
+
+#[derive(Default)]
+struct Chan {
+    q: VecDeque<Elem>,
+    last_push: u64,
+    last_pop: u64,
+}
+
+#[derive(Default)]
+struct Channels {
+    map: FxHashMap<Key, Chan>,
+}
+
+impl Channels {
+    fn push(&mut self, key: Key, mut e: Elem, lat: u64) {
+        let c = self.map.entry(key).or_default();
+        // 1 element/cycle on each stream
+        let t_op = e.t.max(c.last_push + 1);
+        c.last_push = t_op;
+        e.t = t_op + lat;
+        c.q.push_back(e);
+    }
+
+    fn front(&self, key: Key) -> Option<&Elem> {
+        self.map.get(&key).and_then(|c| c.q.front())
+    }
+
+    /// Pop the raw element (admission path — no pop-rate accounting; the
+    /// LSQ's in-order admission chain models that).
+    fn pop_elem(&mut self, key: Key) -> Option<Elem> {
+        self.map.get_mut(&key)?.q.pop_front()
+    }
+
+    fn pop(&mut self, key: Key, t_ctrl: u64) -> Option<(Val, bool, u32, u64)> {
+        let c = self.map.get_mut(&key)?;
+        let e = c.q.pop_front()?;
+        let t = e.t.max(t_ctrl).max(c.last_pop + 1);
+        c.last_pop = t;
+        Some((e.val, e.poison, e.mem, t))
+    }
+
+    fn all_empty(&self) -> bool {
+        self.map.values().all(|c| c.q.is_empty())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-array LSQ (the DU)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct WinEntry {
+    req: Elem,
+    t_enter: u64,
+    /// Per-(array, mem) admission sequence — value delivery is reordered
+    /// back to this order (loads may execute out of order in the window,
+    /// but the CU/AGU consume values in request order).
+    seq: u64,
+}
+
+/// Per-static-op load-value reorder buffer (ring indexed by
+/// `seq - next_release`; the window bounds its size).
+#[derive(Default)]
+struct Rob {
+    next_admit: u64,
+    next_release: u64,
+    /// executed, not-yet-released values, slot i = seq `next_release + i`
+    done: VecDeque<Option<(Val, u64)>>,
+}
+
+impl Rob {
+    #[inline]
+    fn insert(&mut self, seq: u64, v: (Val, u64)) {
+        let idx = (seq - self.next_release) as usize;
+        while self.done.len() <= idx {
+            self.done.push_back(None);
+        }
+        self.done[idx] = Some(v);
+    }
+
+    #[inline]
+    fn pop_ready(&mut self) -> Option<(Val, u64)> {
+        match self.done.front() {
+            Some(Some(_)) => {
+                self.next_release += 1;
+                self.done.pop_front().flatten()
+            }
+            _ => None,
+        }
+    }
+}
+
+struct Lsq {
+    arr: ArrayId,
+    /// LSQ window: admitted, unresolved requests in order.
+    window: VecDeque<WinEntry>,
+    /// Load-value reorder buffers, one per static load op.
+    robs: FxHashMap<u32, Rob>,
+    /// In-order admission time of the last request.
+    t_enter_last: u64,
+    /// Resolve times of allocated store entries (ring of ≤ st_q).
+    store_slots: VecDeque<u64>,
+    /// Completion times of in-flight loads (ring of ≤ ld_q).
+    load_slots: VecDeque<u64>,
+    /// Last commit time per address (RAW forwarding horizon).
+    commit_at: FxHashMap<i64, u64>,
+    read_port: u64,
+    write_port: u64,
+}
+
+impl Lsq {
+    fn new(arr: ArrayId) -> Self {
+        Lsq {
+            arr,
+            window: VecDeque::new(),
+            robs: FxHashMap::default(),
+            t_enter_last: 0,
+            store_slots: VecDeque::new(),
+            load_slots: VecDeque::new(),
+            commit_at: FxHashMap::default(),
+            read_port: 0,
+            write_port: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unit interpreter
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum UnitKind {
+    /// Monolithic STA unit (direct memory access).
+    Sta,
+    Agu,
+    Cu,
+}
+
+struct Unit<'a> {
+    kind: UnitKind,
+    name: &'static str,
+    f: &'a Function,
+    env: Vec<Option<Val>>,
+    tval: Vec<u64>,
+    cur: BlockId,
+    prev: Option<BlockId>,
+    /// Next instruction index within the current block (φs handled on
+    /// entry).
+    pc: usize,
+    entered: bool,
+    t_ctrl: u64,
+    done: bool,
+    dyn_instrs: u64,
+    // STA-only memory timing state
+    sta_store_commit: FxHashMap<ArrayId, u64>,
+    sta_read_port: FxHashMap<ArrayId, u64>,
+    sta_write_port: FxHashMap<ArrayId, u64>,
+}
+
+enum StepOut {
+    /// Made progress; call again.
+    Progress,
+    /// Waiting on a channel pop.
+    Blocked,
+    Done,
+}
+
+struct SimCtx<'a> {
+    m: &'a Module,
+    cfg: &'a MachineConfig,
+    chans: Channels,
+    memory: Memory,
+    max_t: u64,
+    agu_consumes: Vec<u32>,
+    cu_consumes: Vec<u32>,
+    trace: Option<Trace>,
+    stores_committed: u64,
+    stores_poisoned: u64,
+    per_mem: FxHashMap<u32, (u64, u64)>,
+    commit_log: Vec<(u32, i64, Val)>,
+}
+
+impl SimCtx<'_> {
+    fn bump(&mut self, t: u64) {
+        if t > self.max_t {
+            self.max_t = t;
+        }
+    }
+}
+
+impl<'a> Unit<'a> {
+    fn new(kind: UnitKind, name: &'static str, f: &'a Function, args: &[Val]) -> Self {
+        let mut env = vec![None; f.values.len()];
+        for (i, &p) in f.params.iter().enumerate() {
+            env[p.index()] = Some(args[i]);
+        }
+        Unit {
+            kind,
+            name,
+            f,
+            env,
+            tval: vec![0; f.values.len()],
+            cur: f.entry,
+            prev: None,
+            pc: 0,
+            entered: false,
+            t_ctrl: 0,
+            done: false,
+            dyn_instrs: 0,
+            sta_store_commit: FxHashMap::default(),
+            sta_read_port: FxHashMap::default(),
+            sta_write_port: FxHashMap::default(),
+        }
+    }
+
+    /// Execute until blocked on a channel or done. Returns whether any
+    /// instruction was executed.
+    fn run(&mut self, ctx: &mut SimCtx) -> Result<bool> {
+        let mut any = false;
+        loop {
+            match self.step(ctx)? {
+                StepOut::Progress => any = true,
+                StepOut::Blocked => return Ok(any),
+                StepOut::Done => {
+                    self.done = true;
+                    return Ok(any);
+                }
+            }
+        }
+    }
+
+    fn step(&mut self, ctx: &mut SimCtx) -> Result<StepOut> {
+        if self.done {
+            return Ok(StepOut::Done);
+        }
+        let f = self.f;
+        let block = &f.blocks[self.cur.index()];
+
+        if !self.entered {
+            // φs evaluate atomically on entry
+            let mut updates: Vec<(usize, Val, u64)> = Vec::new();
+            for &iid in &block.instrs {
+                let instr = f.instr(iid);
+                if let Op::Phi { incomings, .. } = &instr.op {
+                    let pb = self.prev.ok_or_else(|| anyhow!("φ in entry block"))?;
+                    let (_, v) = incomings
+                        .iter()
+                        .find(|(bb, _)| *bb == pb)
+                        .ok_or_else(|| {
+                            anyhow!("φ missing incoming for {pb} in {} of @{}", block.name, f.name)
+                        })?;
+                    let val = self.env[v.index()]
+                        .ok_or_else(|| anyhow!("φ operand undefined in @{}", f.name))?;
+                    let t = self.tval[v.index()].max(self.t_ctrl);
+                    updates.push((instr.result.unwrap().index(), val, t));
+                } else {
+                    break;
+                }
+            }
+            self.pc = updates.len();
+            for (vi, val, t) in updates {
+                self.env[vi] = Some(val);
+                self.tval[vi] = t;
+            }
+            self.entered = true;
+        }
+
+        // straight-line execution from pc
+        while self.pc < block.instrs.len() {
+            let iid = block.instrs[self.pc];
+            let instr = f.instr(iid);
+            self.dyn_instrs += 1;
+            if self.dyn_instrs > ctx.cfg.max_dyn_instrs {
+                bail!("@{}: exceeded max dynamic instructions", f.name);
+            }
+
+            macro_rules! get {
+                ($v:expr) => {
+                    self.env[$v.index()]
+                        .ok_or_else(|| anyhow!("use of undefined value in @{}", f.name))?
+                };
+            }
+            macro_rules! tv {
+                ($v:expr) => {
+                    self.tval[$v.index()]
+                };
+            }
+
+            let (result, t_res): (Option<Val>, u64) = match &instr.op {
+                Op::Phi { .. } => bail!("φ after non-φ reached execution in @{}", f.name),
+                // constants are hardwired — available at t=0
+                Op::ConstI(x) => (Some(Val::I(*x)), 0),
+                Op::ConstF(x) => (Some(Val::F(*x)), 0),
+                Op::ConstB(x) => (Some(Val::B(*x)), 0),
+                Op::IBin(o, a, b) => {
+                    let lat = match o {
+                        crate::ir::BinOp::Mul => ctx.cfg.mul_lat,
+                        crate::ir::BinOp::Div | crate::ir::BinOp::Rem => ctx.cfg.div_lat,
+                        _ => 1,
+                    };
+                    (
+                        Some(Val::I(eval_ibin(*o, get!(a).as_i(), get!(b).as_i()))),
+                        tv!(a).max(tv!(b)) + lat,
+                    )
+                }
+                Op::FBin(o, a, b) => {
+                    let lat = match o {
+                        crate::ir::BinOp::Mul => ctx.cfg.mul_lat,
+                        crate::ir::BinOp::Div | crate::ir::BinOp::Rem => ctx.cfg.div_lat,
+                        _ => 2,
+                    };
+                    (
+                        Some(Val::F(eval_fbin(*o, get!(a).as_f(), get!(b).as_f()))),
+                        tv!(a).max(tv!(b)) + lat,
+                    )
+                }
+                Op::ICmp(o, a, b) => (
+                    Some(Val::B(eval_icmp(*o, get!(a).as_i(), get!(b).as_i()))),
+                    tv!(a).max(tv!(b)) + 1,
+                ),
+                Op::FCmp(o, a, b) => (
+                    Some(Val::B(eval_fcmp(*o, get!(a).as_f(), get!(b).as_f()))),
+                    tv!(a).max(tv!(b)) + 1,
+                ),
+                Op::Not(a) => (Some(Val::B(!get!(a).as_b())), tv!(a) + 1),
+                Op::Select { cond, t, f: fv, .. } => {
+                    let v = if get!(cond).as_b() { get!(t) } else { get!(fv) };
+                    (Some(v), tv!(cond).max(tv!(t)).max(tv!(fv)) + 1)
+                }
+                Op::IToF(a) => (Some(Val::F(get!(a).as_i() as f64)), tv!(a) + 1),
+                Op::FToI(a) => (Some(Val::I(get!(a).as_f() as i64)), tv!(a) + 1),
+
+                Op::Load { arr, idx, .. } => {
+                    // STA unit only
+                    debug_assert!(self.kind == UnitKind::Sta);
+                    let i = get!(idx).as_i();
+                    let a = &ctx.memory[arr.index()];
+                    if i < 0 || i as usize >= a.len() {
+                        bail!("STA load @{}[{}] out of bounds", ctx.m.array(*arr).name, i);
+                    }
+                    let v = a[i as usize];
+                    let barrier = self.sta_store_commit.get(arr).copied().unwrap_or(0);
+                    let port = self.sta_read_port.entry(*arr).or_insert(0);
+                    let t_issue = tv!(idx).max(self.t_ctrl).max(barrier).max(*port);
+                    *port = t_issue + 1;
+                    let t_done = t_issue + ctx.cfg.mem_read_lat;
+                    ctx.bump(t_done);
+                    if let Some(tr) = &mut ctx.trace {
+                        tr.push("sta", "ld_issue", 0, t_issue);
+                    }
+                    (Some(v), t_done)
+                }
+                Op::Store { arr, idx, val } => {
+                    debug_assert!(self.kind == UnitKind::Sta);
+                    let i = get!(idx).as_i();
+                    let v = get!(val);
+                    let alen = ctx.memory[arr.index()].len();
+                    if i < 0 || i as usize >= alen {
+                        bail!("STA store @{}[{}] out of bounds", ctx.m.array(*arr).name, i);
+                    }
+                    let port = self.sta_write_port.entry(*arr).or_insert(0);
+                    let t_w = tv!(idx).max(tv!(val)).max(self.t_ctrl).max(*port);
+                    *port = t_w + 1;
+                    let t_commit = t_w + ctx.cfg.mem_write_lat;
+                    ctx.memory[arr.index()][i as usize] = v;
+                    ctx.commit_log.push((0, i, v));
+                    let e = self.sta_store_commit.entry(*arr).or_insert(0);
+                    *e = (*e).max(t_commit);
+                    ctx.stores_committed += 1;
+                    ctx.bump(t_commit);
+                    if let Some(tr) = &mut ctx.trace {
+                        tr.push("sta", "st_commit", 0, t_w);
+                    }
+                    (None, t_commit)
+                }
+
+                Op::SendLdAddr { chan, mem, idx } | Op::SendStAddr { chan, mem, idx } => {
+                    let is_store = matches!(instr.op, Op::SendStAddr { .. });
+                    let arr = ctx.m.chan(*chan).arr;
+                    let t = tv!(idx).max(self.t_ctrl);
+                    ctx.chans.push(
+                        Key::Req(arr),
+                        Elem { val: get!(idx), poison: false, mem: *mem, is_store, t },
+                        ctx.cfg.chan_lat,
+                    );
+                    ctx.bump(t);
+                    if let Some(tr) = &mut ctx.trace {
+                        tr.push(self.name, if is_store { "send_st" } else { "send_ld" }, *mem, t);
+                    }
+                    (None, t)
+                }
+                Op::ConsumeVal { chan, mem, .. } => {
+                    let arr = ctx.m.chan(*chan).arr;
+                    let key = match ctx.m.chan(*chan).kind {
+                        ChanKind::LdValAgu => Key::LdValAgu(arr, *mem),
+                        _ => Key::LdVal(arr, *mem),
+                    };
+                    // Dataflow pop: stream pops are in-order and (in these
+                    // slices) unconditional per iteration, so the circuit
+                    // pops ahead of branch resolution — no t_ctrl term.
+                    let Some((v, _poison, _m, t)) = ctx.chans.pop(key, 0) else {
+                        return Ok(StepOut::Blocked);
+                    };
+                    ctx.bump(t);
+                    if let Some(tr) = &mut ctx.trace {
+                        tr.push(self.name, "consume", *mem, t);
+                    }
+                    (Some(v), t)
+                }
+                Op::ProduceVal { chan, mem, val } => {
+                    let arr = ctx.m.chan(*chan).arr;
+                    let t = tv!(val).max(self.t_ctrl);
+                    ctx.chans.push(
+                        Key::StVal(arr),
+                        Elem { val: get!(val), poison: false, mem: *mem, is_store: true, t },
+                        ctx.cfg.chan_lat,
+                    );
+                    ctx.bump(t);
+                    if let Some(tr) = &mut ctx.trace {
+                        tr.push(self.name, "produce", *mem, t);
+                    }
+                    (None, t)
+                }
+                Op::PoisonVal { chan, mem, pred } => {
+                    let fire = match pred {
+                        Some(pv) => get!(pv).as_b(),
+                        None => true,
+                    };
+                    let t = pred.map(|pv| tv!(pv)).unwrap_or(0).max(self.t_ctrl);
+                    if fire {
+                        let arr = ctx.m.chan(*chan).arr;
+                        ctx.chans.push(
+                            Key::StVal(arr),
+                            Elem {
+                                val: Val::I(0),
+                                poison: true,
+                                mem: *mem,
+                                is_store: true,
+                                t,
+                            },
+                            ctx.cfg.chan_lat,
+                        );
+                        if let Some(tr) = &mut ctx.trace {
+                            tr.push(self.name, "poison", *mem, t);
+                        }
+                    }
+                    ctx.bump(t);
+                    (None, t)
+                }
+            };
+
+            if let (Some(r), Some(v)) = (instr.result, result) {
+                self.env[r.index()] = Some(v);
+                self.tval[r.index()] = t_res;
+            }
+            ctx.bump(t_res);
+            self.pc += 1;
+        }
+
+        // terminator
+        match &block.term {
+            Terminator::Br(t) => {
+                self.prev = Some(self.cur);
+                self.cur = *t;
+            }
+            Terminator::CondBr { cond, t, f: fb } => {
+                let c = self.env[cond.index()]
+                    .ok_or_else(|| anyhow!("undefined branch condition in @{}", f.name))?;
+                self.t_ctrl = self.t_ctrl.max(self.tval[cond.index()]);
+                self.prev = Some(self.cur);
+                self.cur = if c.as_b() { *t } else { *fb };
+            }
+            Terminator::Ret => return Ok(StepOut::Done),
+            Terminator::Unterminated => bail!("unterminated block in @{}", f.name),
+        }
+        self.entered = false;
+        self.pc = 0;
+        Ok(StepOut::Progress)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the DU
+// ---------------------------------------------------------------------------
+
+/// Process as many requests as possible for one array. Returns whether
+/// progress was made.
+///
+/// The LSQ window semantics (§3.1): requests are admitted in arrival
+/// order; store *values* arrive in store order on the shared `StVal`
+/// stream, so only the oldest unresolved store can resolve at a time;
+/// loads may bypass value-pending stores but stall on an earlier
+/// unresolved store to the same address (RAW). Poisoned stores release
+/// their slot without committing.
+fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx, spec_mems: &[u32]) -> Result<bool> {
+    let arr = lsq.arr;
+    let mut progress = false;
+
+    // admit everything that has arrived
+    while let Some(req) = ctx.chans.pop_elem(Key::Req(arr)) {
+        let mut t_enter = req.t.max(lsq.t_enter_last + 1);
+        if req.is_store {
+            if lsq.store_slots.len() >= ctx.cfg.st_q {
+                t_enter = t_enter.max(lsq.store_slots.pop_front().unwrap());
+            }
+        } else if lsq.load_slots.len() >= ctx.cfg.ld_q {
+            t_enter = t_enter.max(lsq.load_slots.pop_front().unwrap());
+        }
+        lsq.t_enter_last = t_enter;
+        ctx.per_mem.entry(req.mem).or_insert((0, 0)).0 += 1;
+        let seq = if req.is_store {
+            0
+        } else {
+            let rob = lsq.robs.entry(req.mem).or_default();
+            let s = rob.next_admit;
+            rob.next_admit += 1;
+            s
+        };
+        lsq.window.push_back(WinEntry { req, t_enter, seq });
+    }
+
+    // process the window
+    loop {
+        let mut acted = false;
+        let mut wi = 0;
+        while wi < lsq.window.len() {
+            let e = lsq.window[wi].clone();
+            if e.req.is_store {
+                // only the OLDEST unresolved store matches the next value
+                let is_oldest_store = lsq
+                    .window
+                    .iter()
+                    .take(wi)
+                    .all(|x| !x.req.is_store);
+                if !is_oldest_store {
+                    wi += 1;
+                    continue;
+                }
+                let Some(v) = ctx.chans.front(Key::StVal(arr)).copied() else {
+                    wi += 1;
+                    continue;
+                };
+                // Lemma 6.1 runtime check: the k-th store value must pair
+                // with the k-th store request of this array's stream.
+                if v.mem != e.req.mem {
+                    bail!(
+                        "store stream order violated on @{}: request m{} paired with value m{} \
+                         (sequential consistency broken)",
+                        ctx.m.array(arr).name,
+                        e.req.mem,
+                        v.mem
+                    );
+                }
+                ctx.chans.pop(Key::StVal(arr), 0);
+                if v.poison {
+                    let t_resolve = e.t_enter.max(v.t);
+                    lsq.store_slots.push_back(t_resolve);
+                    ctx.stores_poisoned += 1;
+                    ctx.per_mem.get_mut(&e.req.mem).unwrap().1 += 1;
+                    ctx.bump(t_resolve);
+                    if let Some(tr) = &mut ctx.trace {
+                        tr.push("du", "st_poison", e.req.mem, t_resolve);
+                    }
+                } else {
+                    let addr = e.req.val.as_i();
+                    let alen = ctx.memory[arr.index()].len();
+                    if addr < 0 || addr as usize >= alen {
+                        bail!(
+                            "committed store @{}[{}] out of bounds (mem op m{})",
+                            ctx.m.array(arr).name,
+                            addr,
+                            e.req.mem
+                        );
+                    }
+                    let t_w = e.t_enter.max(v.t).max(lsq.write_port);
+                    lsq.write_port = t_w + 1;
+                    let t_commit = t_w + ctx.cfg.mem_write_lat;
+                    ctx.memory[arr.index()][addr as usize] = v.val;
+                    ctx.commit_log.push((e.req.mem, addr, v.val));
+                    lsq.commit_at.insert(addr, t_commit);
+                    lsq.store_slots.push_back(t_commit);
+                    ctx.stores_committed += 1;
+                    ctx.bump(t_commit);
+                    if let Some(tr) = &mut ctx.trace {
+                        tr.push("du", "st_commit", e.req.mem, t_w);
+                    }
+                }
+                lsq.window.remove(wi);
+                acted = true;
+                // restart the scan: removing the store may unblock loads
+                break;
+            } else {
+                // load: stall only on an earlier unresolved same-address
+                // store (disambiguation is exact — addresses are known at
+                // admission)
+                let addr = e.req.val.as_i();
+                let raw_blocked = lsq
+                    .window
+                    .iter()
+                    .take(wi)
+                    .any(|x| x.req.is_store && x.req.val.as_i() == addr);
+                if raw_blocked {
+                    wi += 1;
+                    continue;
+                }
+                let a = &ctx.memory[arr.index()];
+                let v = a[clamp_idx(addr, a.len())];
+                let raw = lsq.commit_at.get(&addr).copied().unwrap_or(0);
+                let t_issue = e.t_enter.max(raw).max(lsq.read_port);
+                lsq.read_port = t_issue + 1;
+                let t_done = t_issue + ctx.cfg.mem_read_lat;
+                ctx.bump(t_done);
+                if let Some(tr) = &mut ctx.trace {
+                    tr.push("du", "ld_issue", e.req.mem, t_issue);
+                }
+                lsq.load_slots.push_back(t_done);
+                if lsq.load_slots.len() > ctx.cfg.ld_q {
+                    lsq.load_slots.pop_front();
+                }
+                // deliver through the per-op reorder buffer: the consumer
+                // pops values in request order even when loads bypass
+                let mem = e.req.mem;
+                lsq.robs.entry(mem).or_default().insert(e.seq, (v, t_done));
+                loop {
+                    let rob = lsq.robs.get_mut(&mem).unwrap();
+                    let Some((rv, rt)) = rob.pop_ready() else { break };
+                    if ctx.cu_consumes.contains(&mem) {
+                        ctx.chans.push(
+                            Key::LdVal(arr, mem),
+                            Elem { val: rv, poison: false, mem, is_store: false, t: rt },
+                            ctx.cfg.chan_lat,
+                        );
+                    }
+                    if ctx.agu_consumes.contains(&mem) {
+                        ctx.chans.push(
+                            Key::LdValAgu(arr, mem),
+                            Elem { val: rv, poison: false, mem, is_store: false, t: rt },
+                            ctx.cfg.chan_lat,
+                        );
+                    }
+                }
+                lsq.window.remove(wi);
+                acted = true;
+                break;
+            }
+        }
+        if acted {
+            progress = true;
+        } else {
+            break;
+        }
+    }
+    let _ = spec_mems;
+    Ok(progress)
+}
+
+// ---------------------------------------------------------------------------
+// top level
+// ---------------------------------------------------------------------------
+
+/// Simulate a compiled architecture over `args` and an initial memory
+/// image.
+pub fn simulate(
+    c: &Compiled,
+    args: &[Val],
+    memory: Memory,
+    cfg: &MachineConfig,
+) -> Result<SimResult> {
+    match c {
+        Compiled::Monolithic { module, .. } => {
+            let f = &module.funcs[0];
+            let mut ctx = SimCtx {
+                m: module,
+                cfg,
+                chans: Channels::default(),
+                memory,
+                max_t: 0,
+                agu_consumes: vec![],
+                cu_consumes: vec![],
+                trace: if cfg.trace { Some(Trace::default()) } else { None },
+                stores_committed: 0,
+                stores_poisoned: 0,
+                per_mem: FxHashMap::default(),
+                commit_log: Vec::new(),
+            };
+            let mut unit = Unit::new(UnitKind::Sta, "sta", f, args);
+            loop {
+                let progressed = unit.run(&mut ctx)?;
+                if unit.done {
+                    break;
+                }
+                if !progressed {
+                    bail!("STA unit blocked (channel op in monolithic build?)");
+                }
+            }
+            Ok(SimResult {
+                cycles: ctx.max_t,
+                memory: ctx.memory,
+                dyn_instrs: unit.dyn_instrs,
+                stores_committed: ctx.stores_committed,
+                stores_poisoned: 0,
+                spec_store_reqs: 0,
+                misspec_rate: 0.0,
+                per_mem: ctx.per_mem,
+                trace: ctx.trace,
+                commit_log: ctx.commit_log,
+            })
+        }
+        Compiled::Dae { program, map, .. } => {
+            let module = &program.module;
+            let mut ctx = SimCtx {
+                m: module,
+                cfg,
+                chans: Channels::default(),
+                memory,
+                max_t: 0,
+                agu_consumes: program.agu_consumes.clone(),
+                cu_consumes: program.cu_consumes.clone(),
+                trace: if cfg.trace { Some(Trace::default()) } else { None },
+                stores_committed: 0,
+                stores_poisoned: 0,
+                per_mem: FxHashMap::default(),
+                commit_log: Vec::new(),
+            };
+            let spec_mems: Vec<u32> = map
+                .as_ref()
+                .map(|m| {
+                    m.iter()
+                        .flat_map(|(_, rs)| rs.iter().filter(|r| r.is_store).map(|r| r.mem))
+                        .collect()
+                })
+                .unwrap_or_default();
+
+            let mut agu = Unit::new(UnitKind::Agu, "agu", program.agu_fn(), args);
+            let mut cu = Unit::new(UnitKind::Cu, "cu", program.cu_fn(), args);
+            let mut lsqs: Vec<Lsq> = module
+                .arrays
+                .iter()
+                .enumerate()
+                .map(|(i, _)| Lsq::new(ArrayId(i as u32)))
+                .collect();
+
+            loop {
+                let mut progress = false;
+                if !agu.done {
+                    progress |= agu.run(&mut ctx)?;
+                }
+                if !cu.done {
+                    progress |= cu.run(&mut ctx)?;
+                }
+                for lsq in &mut lsqs {
+                    progress |= du_step(lsq, &mut ctx, &spec_mems)?;
+                }
+                if agu.done && cu.done && ctx.chans.all_empty()
+                    && lsqs.iter().all(|l| l.window.is_empty())
+                {
+                    break;
+                }
+                if !progress {
+                    let mut pending: Vec<String> = ctx
+                        .chans
+                        .map
+                        .iter()
+                        .filter(|(_, c)| !c.q.is_empty())
+                        .map(|(k, c)| format!("{k:?}({})", c.q.len()))
+                        .collect();
+                    for l in &lsqs {
+                        if !l.window.is_empty() {
+                            pending.push(format!("LSQ(@{})[{}]", ctx.m.array(l.arr).name, l.window.len()));
+                        }
+                    }
+                    bail!(
+                        "deadlock: agu_done={} cu_done={} pending={:?}",
+                        agu.done,
+                        cu.done,
+                        pending
+                    );
+                }
+            }
+
+            let spec_store_reqs: u64 =
+                spec_mems.iter().map(|m| ctx.per_mem.get(m).map(|x| x.0).unwrap_or(0)).sum();
+            let spec_poisons: u64 =
+                spec_mems.iter().map(|m| ctx.per_mem.get(m).map(|x| x.1).unwrap_or(0)).sum();
+            Ok(SimResult {
+                cycles: ctx.max_t,
+                memory: ctx.memory,
+                dyn_instrs: agu.dyn_instrs + cu.dyn_instrs,
+                stores_committed: ctx.stores_committed,
+                stores_poisoned: ctx.stores_poisoned,
+                spec_store_reqs,
+                misspec_rate: if spec_store_reqs > 0 {
+                    spec_poisons as f64 / spec_store_reqs as f64
+                } else {
+                    0.0
+                },
+                per_mem: ctx.per_mem,
+                trace: ctx.trace,
+                commit_log: ctx.commit_log,
+            })
+        }
+    }
+}
+
+/// Simulate and also return a functional cross-check against the
+/// reference interpreter of the original function.
+pub fn simulate_checked(
+    m: &Module,
+    func_idx: usize,
+    c: &Compiled,
+    args: &[Val],
+    memory: Memory,
+    cfg: &MachineConfig,
+) -> Result<(SimResult, bool)> {
+    let reference = super::interp::interpret(
+        m,
+        &m.funcs[func_idx],
+        args,
+        memory.clone(),
+        cfg.max_dyn_instrs,
+    )?;
+    let sim = simulate(c, args, memory, cfg)?;
+    let matches = super::memory_diff(&sim.memory, &reference.memory).is_none();
+    let expected_match = !matches!(c.arch(), Arch::Oracle);
+    if expected_match && !matches {
+        let (ai, i) = super::memory_diff(&sim.memory, &reference.memory).unwrap();
+        bail!(
+            "{} final memory diverges from reference at @{}[{}]: {} vs {}",
+            c.arch().name(),
+            m.array(crate::ir::ArrayId(ai as u32)).name,
+            i,
+            sim.memory[ai][i],
+            reference.memory[ai][i],
+        );
+    }
+    Ok((sim, matches))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+    use crate::sim::zero_memory;
+    use crate::transform::{build, Arch};
+
+    const FIG1C: &str = r#"
+array @A : i64[64]
+array @idx : i64[64]
+
+func @fig1c(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %fv = add.i %aw, %c1
+  store @A[%w], %fv
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#;
+
+    fn fig1c_memory(m: &crate::ir::Module) -> Memory {
+        let mut mem = zero_memory(m);
+        for i in 0..64 {
+            mem[0][i] = Val::I(if i % 3 == 0 { 5 } else { -5 });
+            mem[1][i] = Val::I(((i * 7) % 64) as i64);
+        }
+        mem
+    }
+
+    #[test]
+    fn sta_dae_spec_match_reference() {
+        let m = parse_module(FIG1C).unwrap();
+        let mem = fig1c_memory(&m);
+        let cfg = MachineConfig::default();
+        let mut cycles = std::collections::HashMap::new();
+        for arch in [Arch::Sta, Arch::Dae, Arch::Spec] {
+            let c = build(&m, 0, arch).unwrap();
+            let (sim, ok) =
+                simulate_checked(&m, 0, &c, &[Val::I(64)], mem.clone(), &cfg).unwrap();
+            assert!(ok, "{arch:?} memory matches");
+            cycles.insert(arch, sim.cycles);
+            if arch == Arch::Spec {
+                assert!(sim.stores_poisoned > 0, "some stores must be poisoned");
+                assert!(sim.misspec_rate > 0.3 && sim.misspec_rate < 0.9);
+            }
+        }
+        // the paper's shape: DAE (no spec) is much slower than SPEC
+        assert!(
+            cycles[&Arch::Dae] > 2 * cycles[&Arch::Spec],
+            "DAE {} vs SPEC {}",
+            cycles[&Arch::Dae],
+            cycles[&Arch::Spec]
+        );
+        // and SPEC beats STA
+        assert!(
+            cycles[&Arch::Sta] > cycles[&Arch::Spec],
+            "STA {} vs SPEC {}",
+            cycles[&Arch::Sta],
+            cycles[&Arch::Spec]
+        );
+    }
+
+    #[test]
+    fn oracle_runs_and_diverges_on_adversarial_data() {
+        let m = parse_module(FIG1C).unwrap();
+        let mem = fig1c_memory(&m);
+        let cfg = MachineConfig::default();
+        let c = build(&m, 0, Arch::Oracle).unwrap();
+        let (sim, matches) =
+            simulate_checked(&m, 0, &c, &[Val::I(64)], mem, &cfg).unwrap();
+        assert!(!matches, "oracle must be functionally wrong on this input");
+        assert!(sim.cycles > 0);
+    }
+}

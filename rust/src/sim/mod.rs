@@ -1,0 +1,104 @@
+//! Cycle-level timing model of the DAE machine, replacing the paper's
+//! ModelSim RTL simulation (see DESIGN.md §2 for the substitution
+//! argument).
+//!
+//! The model is a *timestamp-dataflow* simulation: the functional
+//! co-simulation of the AGU, DU and CU drives control flow, and every
+//! dynamic event (value definition, channel push/pop, LSQ entry, memory
+//! port grant) carries a cycle timestamp computed from its dependencies:
+//!
+//! - pure ops: `t = max(operands) + latency`;
+//! - side-effecting ops additionally wait for control resolution
+//!   (`t_ctrl`, the running branch-resolution chain of the unit);
+//! - channel pops wait for the matching push + channel latency, rate 1
+//!   per cycle; pushes respect capacity (the pop time of the k-capacity
+//!   earlier element);
+//! - the per-array LSQ admits requests in arrival order, allocates store
+//!   entries against the store-queue capacity (paper: 32), bounds load
+//!   concurrency (paper: 4), forwards RAW through commit timestamps and
+//!   drops poisoned stores without commit (§3.1);
+//! - the dual-ported SRAM grants 1 read + 1 write per cycle per array.
+//!
+//! The statically-scheduled baseline (STA) runs the *same* engine with
+//! memory executed in the single unit and the paper's conservative rule:
+//! a load from an array may not issue before every earlier store to that
+//! array has committed ("loads that cannot be disambiguated at compile
+//! time execute in order", §8.1.1).
+
+pub mod interp;
+pub mod machine;
+pub mod trace;
+
+pub use interp::{interpret, InterpResult};
+pub use machine::{simulate, SimResult};
+pub use trace::{Trace, TraceEvent};
+
+use crate::ir::types::Val;
+
+/// Machine configuration. Defaults follow the paper's evaluation setup
+/// (§8.1): on-chip dual-ported SRAM, LSQ load/store queue sizes 4/32.
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    /// SRAM read latency (cycles).
+    pub mem_read_lat: u64,
+    /// SRAM write occupancy (cycles until commit visible).
+    pub mem_write_lat: u64,
+    /// FIFO channel latency (cycles) — AGU→DU, DU→CU, CU→DU hops.
+    pub chan_lat: u64,
+    /// FIFO capacity (elements).
+    pub chan_cap: usize,
+    /// LSQ load-queue size (max loads in flight per array). Paper: 4.
+    pub ld_q: usize,
+    /// LSQ store-queue size (max allocated store entries per array).
+    /// Paper: 32.
+    pub st_q: usize,
+    /// Latency of integer/float multiply.
+    pub mul_lat: u64,
+    /// Latency of divide/remainder.
+    pub div_lat: u64,
+    /// Safety valve: abort after this many dynamic instructions per unit.
+    pub max_dyn_instrs: u64,
+    /// Record a pipeline trace (Fig. 2 reproduction).
+    pub trace: bool,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        MachineConfig {
+            mem_read_lat: 2,
+            mem_write_lat: 1,
+            chan_lat: 2,
+            chan_cap: 16,
+            ld_q: 4,
+            st_q: 32,
+            mul_lat: 3,
+            div_lat: 12,
+            max_dyn_instrs: 200_000_000,
+            trace: false,
+        }
+    }
+}
+
+/// Initial/final memory image: one value vector per array, index-aligned
+/// with `Module::arrays`.
+pub type Memory = Vec<Vec<Val>>;
+
+/// Build a zeroed memory image for a module.
+pub fn zero_memory(m: &crate::ir::Module) -> Memory {
+    m.arrays
+        .iter()
+        .map(|a| vec![Val::zero(a.elem); a.size])
+        .collect()
+}
+
+/// Bit-exact memory comparison; returns the first mismatch.
+pub fn memory_diff(a: &Memory, b: &Memory) -> Option<(usize, usize)> {
+    for (ai, (va, vb)) in a.iter().zip(b).enumerate() {
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            if !x.bits_eq(*y) {
+                return Some((ai, i));
+            }
+        }
+    }
+    None
+}

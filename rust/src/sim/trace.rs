@@ -1,0 +1,53 @@
+//! Pipeline event traces (Fig. 2 reproduction: decoupled vs.
+//! non-decoupled address-generation timelines).
+
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Unit that produced the event (`agu`, `du`, `cu`, `sta`).
+    pub unit: &'static str,
+    /// Event kind (`send_ld`, `send_st`, `ld_issue`, `ld_done`,
+    /// `st_commit`, `st_poison`, `consume`, `produce`).
+    pub kind: &'static str,
+    /// Static memory op id.
+    pub mem: u32,
+    /// Cycle of the event.
+    pub t: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn push(&mut self, unit: &'static str, kind: &'static str, mem: u32, t: u64) {
+        self.events.push(TraceEvent { unit, kind, mem, t });
+    }
+
+    /// Render an ASCII timeline of the first `n` events per (unit, kind),
+    /// bucketed by cycle — the Fig. 2 visualisation.
+    pub fn render(&self, max_cycle: u64) -> String {
+        use std::fmt::Write;
+        let mut lanes: Vec<(String, Vec<u64>)> = Vec::new();
+        for e in &self.events {
+            if e.t > max_cycle {
+                continue;
+            }
+            let lane = format!("{:>3} {:<9} m{}", e.unit, e.kind, e.mem);
+            match lanes.iter_mut().find(|(l, _)| *l == lane) {
+                Some((_, ts)) => ts.push(e.t),
+                None => lanes.push((lane, vec![e.t])),
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "{:<20} | cycles 0..{max_cycle}", "lane");
+        for (lane, ts) in &lanes {
+            let mut row = vec![b'.'; (max_cycle + 1) as usize];
+            for &t in ts {
+                row[t as usize] = b'#';
+            }
+            let _ = writeln!(s, "{:<20} | {}", lane, String::from_utf8_lossy(&row));
+        }
+        s
+    }
+}

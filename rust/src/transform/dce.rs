@@ -1,0 +1,157 @@
+//! Dead-code elimination (paper §3.2 step 3).
+//!
+//! Roots are side-effecting ops (stores, channel sends/produces/poisons)
+//! and terminator conditions. [`Op::ConsumeVal`] is special: although it
+//! pops a FIFO, a consume whose *result is unused* is removable — the
+//! stream contract is renegotiated afterwards (the DU simply stops
+//! forwarding values for that static op), which is how the AGU slice
+//! sheds the loads it does not need (see `decouple::prune_channels`).
+
+use crate::ir::{Function, InstrId, Op, Terminator};
+
+/// Returns the set of removed instruction ids.
+pub fn run(f: &mut Function) -> Vec<InstrId> {
+    // Count uses of each value by live instructions, iterating to a fixed
+    // point: start by assuming everything is live, then peel dead ops.
+    let mut live = vec![false; f.instrs.len()];
+    let mut work: Vec<InstrId> = Vec::new();
+
+    // Roots: side effects (minus consumes) + terminators.
+    for (bi, b) in f.blocks.iter().enumerate() {
+        let _ = bi;
+        for &iid in &b.instrs {
+            let op = &f.instr(iid).op;
+            let is_root = match op {
+                Op::ConsumeVal { .. } => false, // removable if result unused
+                op => op.has_side_effect(),
+            };
+            if is_root && !live[iid.index()] {
+                live[iid.index()] = true;
+                work.push(iid);
+            }
+        }
+    }
+    // Terminator conditions are roots.
+    let mut root_values: Vec<crate::ir::ValueId> = Vec::new();
+    for b in &f.blocks {
+        if let Terminator::CondBr { cond, .. } = b.term {
+            root_values.push(cond);
+        }
+    }
+
+    let def_instr = |f: &Function, v: crate::ir::ValueId| -> Option<InstrId> {
+        match f.value(v).def {
+            crate::ir::ValueDef::Instr(i) => Some(i),
+            _ => None,
+        }
+    };
+
+    for v in root_values {
+        if let Some(iid) = def_instr(f, v) {
+            if !live[iid.index()] {
+                live[iid.index()] = true;
+                work.push(iid);
+            }
+        }
+    }
+
+    while let Some(iid) = work.pop() {
+        for v in f.instr(iid).op.uses() {
+            if let Some(d) = def_instr(f, v) {
+                if !live[d.index()] {
+                    live[d.index()] = true;
+                    work.push(d);
+                }
+            }
+        }
+    }
+
+    // Remove dead instructions from blocks.
+    let mut removed = Vec::new();
+    for b in &mut f.blocks {
+        b.instrs.retain(|&iid| {
+            // Instructions in blocks but not in the arena range guard.
+            let keep = live[iid.index()];
+            if !keep {
+                removed.push(iid);
+            }
+            keep
+        });
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+
+    #[test]
+    fn removes_dead_arith_keeps_stores() {
+        let (_m, mut f) = parse_single(
+            r#"
+array @A : i64[8]
+func @f(%n: i64) {
+entry:
+  %c1 = const.i 1
+  %dead = add.i %n, %c1
+  %dead2 = mul.i %dead, %dead
+  %live = add.i %n, %n
+  store @A[%c1], %live
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let removed = run(&mut f);
+        assert_eq!(removed.len(), 2);
+        assert_eq!(f.blocks[0].instrs.len(), 3);
+    }
+
+    #[test]
+    fn unused_consume_removed_used_consume_kept() {
+        let (_m, mut f) = parse_single(
+            r#"
+array @A : i64[8]
+chan ch0 : ld_val @A
+chan ch1 : st_val @A
+func @cu() {
+entry:
+  %v = consume_val ch0:m0
+  %w = consume_val ch0:m1
+  produce_val ch1:m2, %w
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let removed = run(&mut f);
+        assert_eq!(removed.len(), 1, "only the unused consume dies");
+        assert!(matches!(
+            f.instr(f.blocks[0].instrs[0]).op,
+            Op::ConsumeVal { mem: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn keeps_branch_condition_chain() {
+        let (_m, mut f) = parse_single(
+            r#"
+func @f(%n: i64) {
+entry:
+  %c1 = const.i 1
+  %x = add.i %n, %c1
+  %c = icmp.lt %x, %n
+  condbr %c, a, b
+a:
+  br b
+b:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let removed = run(&mut f);
+        assert!(removed.is_empty());
+    }
+}

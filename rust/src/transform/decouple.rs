@@ -1,0 +1,269 @@
+//! The DAE decoupling transformation — paper §3.2.
+//!
+//! The original function is cloned twice:
+//!
+//! - **AGU slice**: every `load` becomes `send_ld_addr` (+ a
+//!   `consume_val` on the DU→AGU value stream when the AGU itself needs
+//!   the loaded value — the synchronised case of Fig. 1b); every `store`
+//!   becomes `send_st_addr`. Dead code (compute, store values) is then
+//!   eliminated.
+//! - **CU slice**: every `load` becomes `consume_val` on the DU→CU value
+//!   stream; every `store` becomes `produce_val`. Address computation
+//!   dies.
+//!
+//! Streams are **per array**: all static ops on one array share a request
+//! stream and a value stream; the `mem` tag identifies the static op so
+//! the DU can route values only to units that still consume them after
+//! DCE (`agu_consumes` / `cu_consumes`).
+
+use super::dce;
+use crate::ir::{ArrayId, BlockId, ChanKind, Function, InstrId, Module, Op};
+
+/// Metadata for one static memory operation of the original program.
+#[derive(Clone, Debug)]
+pub struct MemOpInfo {
+    pub mem: u32,
+    pub is_store: bool,
+    pub arr: ArrayId,
+    /// Block in the *original* CFG (== AGU/CU block ids at decoupling
+    /// time).
+    pub home: BlockId,
+}
+
+/// A decoupled program: AGU + CU slices over shared channels, plus the
+/// static memory-op table.
+#[derive(Clone, Debug)]
+pub struct DaeProgram {
+    pub module: Module,
+    /// Index of the AGU function in `module.funcs`.
+    pub agu: usize,
+    /// Index of the CU function in `module.funcs`.
+    pub cu: usize,
+    pub mem_ops: Vec<MemOpInfo>,
+    /// Static ops whose loaded value the AGU consumes (post-DCE).
+    pub agu_consumes: Vec<u32>,
+    /// Static ops whose loaded value the CU consumes (post-DCE).
+    pub cu_consumes: Vec<u32>,
+}
+
+impl DaeProgram {
+    pub fn agu_fn(&self) -> &Function {
+        &self.module.funcs[self.agu]
+    }
+
+    pub fn cu_fn(&self) -> &Function {
+        &self.module.funcs[self.cu]
+    }
+}
+
+/// Decouple `f` (a function of `m`) into AGU + CU slices.
+///
+/// `run_dce`: run the §3.2 step-3 cleanup (always true in production;
+/// tests disable it to inspect raw slices).
+pub fn decouple(m: &Module, f: &Function, run_dce: bool) -> DaeProgram {
+    let mut module = Module { arrays: m.arrays.clone(), chans: m.chans.clone(), funcs: vec![] };
+
+    // Enumerate static memory ops in layout order.
+    let mut mem_ops: Vec<MemOpInfo> = Vec::new();
+    let mut mem_of_instr: Vec<Option<u32>> = vec![None; f.instrs.len()];
+    for (bi, b) in f.blocks.iter().enumerate() {
+        for &iid in &b.instrs {
+            match f.instr(iid).op {
+                Op::Load { arr, .. } => {
+                    let mem = mem_ops.len() as u32;
+                    mem_of_instr[iid.index()] = Some(mem);
+                    mem_ops.push(MemOpInfo {
+                        mem,
+                        is_store: false,
+                        arr,
+                        home: BlockId(bi as u32),
+                    });
+                }
+                Op::Store { arr, .. } => {
+                    let mem = mem_ops.len() as u32;
+                    mem_of_instr[iid.index()] = Some(mem);
+                    mem_ops.push(MemOpInfo {
+                        mem,
+                        is_store: true,
+                        arr,
+                        home: BlockId(bi as u32),
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ---- AGU slice --------------------------------------------------------
+    let mut agu = f.clone();
+    agu.name = format!("{}__agu", f.name);
+    for (bi, _) in f.blocks.iter().enumerate() {
+        // iterate over a snapshot: we insert into agu blocks as we go
+        let instrs_snapshot = agu.blocks[bi].instrs.clone();
+        for &iid in &instrs_snapshot {
+            let Some(mem) = mem_of_instr[iid.index()] else { continue };
+            match agu.instr(iid).op.clone() {
+                Op::Load { arr, idx, ty } => {
+                    let addr_ch = module.add_chan(ChanKind::LdAddr, arr);
+                    let val_ch = module.add_chan(ChanKind::LdValAgu, arr);
+                    let old_result = agu.instr(iid).result;
+                    // load -> send_ld_addr
+                    agu.instr_mut(iid).op = Op::SendLdAddr { chan: addr_ch, mem, idx };
+                    agu.instr_mut(iid).result = None;
+                    // followed by consume_val on the AGU value stream
+                    let cons = agu.create_instr(Op::ConsumeVal { chan: val_ch, mem, ty });
+                    let pos = agu.blocks[bi].instrs.iter().position(|&i| i == iid).unwrap();
+                    agu.blocks[bi].instrs.insert(pos + 1, cons);
+                    if let (Some(old), Some(new)) = (old_result, agu.instr(cons).result) {
+                        agu.replace_all_uses(old, new);
+                    }
+                }
+                Op::Store { arr, idx, .. } => {
+                    let addr_ch = module.add_chan(ChanKind::StAddr, arr);
+                    agu.instr_mut(iid).op = Op::SendStAddr { chan: addr_ch, mem, idx };
+                    agu.instr_mut(iid).result = None;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ---- CU slice ---------------------------------------------------------
+    let mut cu = f.clone();
+    cu.name = format!("{}__cu", f.name);
+    for iid_raw in 0..cu.instrs.len() {
+        let iid = InstrId(iid_raw as u32);
+        let Some(mem) = mem_of_instr.get(iid_raw).copied().flatten() else { continue };
+        match cu.instr(iid).op.clone() {
+            Op::Load { arr, ty, .. } => {
+                let val_ch = module.add_chan(ChanKind::LdVal, arr);
+                cu.instr_mut(iid).op = Op::ConsumeVal { chan: val_ch, mem, ty };
+                // result value id unchanged: uses keep working
+            }
+            Op::Store { arr, val, .. } => {
+                let st_ch = module.add_chan(ChanKind::StVal, arr);
+                cu.instr_mut(iid).op = Op::ProduceVal { chan: st_ch, mem, val };
+            }
+            _ => {}
+        }
+    }
+
+    if run_dce {
+        dce::run(&mut agu);
+        dce::run(&mut cu);
+    }
+
+    let collect_consumes = |f: &Function| -> Vec<u32> {
+        let mut v = Vec::new();
+        for b in &f.blocks {
+            for &iid in &b.instrs {
+                if let Op::ConsumeVal { mem, .. } = f.instr(iid).op {
+                    v.push(mem);
+                }
+            }
+        }
+        v.sort();
+        v.dedup();
+        v
+    };
+    let agu_consumes = collect_consumes(&agu);
+    let cu_consumes = collect_consumes(&cu);
+
+    module.funcs.push(agu);
+    module.funcs.push(cu);
+    DaeProgram { module, agu: 0, cu: 1, mem_ops, agu_consumes, cu_consumes }
+}
+
+/// Recompute the consume sets after later passes (hoisting + DCE can drop
+/// AGU consumes — the whole point of speculation).
+pub fn refresh_consumes(p: &mut DaeProgram) {
+    let collect = |f: &Function| -> Vec<u32> {
+        let mut v = Vec::new();
+        for b in &f.blocks {
+            for &iid in &b.instrs {
+                if let Op::ConsumeVal { mem, .. } = f.instr(iid).op {
+                    v.push(mem);
+                }
+            }
+        }
+        v.sort();
+        v.dedup();
+        v
+    };
+    p.agu_consumes = collect(&p.module.funcs[p.agu]);
+    p.cu_consumes = collect(&p.module.funcs[p.cu]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+
+    const FIG1B: &str = r#"
+array @A : i64[100]
+array @idx : i64[100]
+
+func @fig1b(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %f = add.i %aw, %c1
+  store @A[%w], %f
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#;
+
+    #[test]
+    fn decouples_fig1b() {
+        let (m, f) = parse_single(FIG1B).unwrap();
+        let p = decouple(&m, &f, true);
+        assert_eq!(p.mem_ops.len(), 4); // 3 loads + 1 store
+        // AGU consumes: A[i] (guard, controls the store send) and idx[i]
+        // (feeds the store address). A[w]'s value is compute-only → not
+        // consumed by the AGU.
+        assert_eq!(p.agu_consumes, vec![0, 1], "AGU consumes guard + idx");
+        // CU consumes: A[i] (guard for its own branch) and A[w] (compute).
+        // idx[i]'s value is address-only → dead in the CU.
+        assert_eq!(p.cu_consumes, vec![0, 2]);
+        // verify both slices
+        crate::ir::verify::verify_module(&p.module).unwrap();
+        // AGU has no loads/stores left
+        for f in &p.module.funcs {
+            for b in &f.blocks {
+                for &iid in &b.instrs {
+                    assert!(!f.instr(iid).op.is_memory());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streams_are_per_array() {
+        let (m, f) = parse_single(FIG1B).unwrap();
+        let p = decouple(&m, &f, true);
+        // A: ld_addr, ld_val_agu, ld_val, st_addr, st_val → 5 chans;
+        // idx: ld_addr, ld_val_agu (created optimistically) → 2 chans.
+        let a_chans =
+            p.module.chans.iter().filter(|c| p.module.array(c.arr).name == "A").count();
+        assert_eq!(a_chans, 5);
+    }
+}

@@ -1,0 +1,665 @@
+//! Algorithm 1 — control-flow hoisting of AGU requests (paper §5.1).
+//!
+//! For every LoD chain-head source block `srcBB` (§5.1.2), traverse the
+//! CFG region from `srcBB` to the loop latch in **reverse post-order**
+//! (the topological order of the forward DAG — §5.1.3) and move every
+//! memory request found to the end of `srcBB`, together with a clone of
+//! its (pure) address computation.
+//!
+//! This implementation adds two safety refusals that the paper leaves
+//! implicit (its examples satisfy them by construction); both are
+//! validated dynamically by the Lemma 6.1 property tests:
+//!
+//! 1. **Exactly-once coverage** — a request may be hoisted to several
+//!    source blocks (paper Fig. 4: `b`, `e` land in both block 2 and 3),
+//!    which is only sound if every path to the request's home block
+//!    passes through exactly one of them. We check (a) no two target
+//!    sources reach one another, and (b) no path reaches the home block
+//!    avoiding all targets.
+//! 2. **Hoistable addresses** — the request's address slice must be
+//!    cloneable at `srcBB` (pure arithmetic over values dominating
+//!    `srcBB`; no φ, no consume). Otherwise the request would still
+//!    synchronise on DU values, defeating speculation.
+//!
+//! A refusal poisons speculation for *every* op on the same array
+//! (all-or-nothing per stream): partial hoisting would reorder the
+//! shared per-array request stream relative to the CU's value stream.
+
+use super::decouple::DaeProgram;
+use crate::analysis::{DomTree, LodAnalysis, LoopInfo, Reachability};
+use crate::ir::{BlockId, Function, InstrId, Op, ValueDef, ValueId};
+use std::collections::{HashMap, HashSet};
+
+/// One speculative request, in AGU issue order at its spec block.
+#[derive(Clone, Debug)]
+pub struct SpecReq {
+    pub mem: u32,
+    pub is_store: bool,
+    pub arr: crate::ir::ArrayId,
+    /// Home block in the (original) CFG — where the request "becomes
+    /// true" (the paper's `trueBB`).
+    pub true_bb: BlockId,
+}
+
+/// Ordered map: spec block → hoisted requests (paper's `SpecReqMap`).
+pub type SpecReqMap = Vec<(BlockId, Vec<SpecReq>)>;
+
+#[derive(Clone, Debug, Default)]
+pub struct HoistResult {
+    pub map: SpecReqMap,
+    /// mem ids that could not be speculated (and why).
+    pub refused: Vec<(u32, String)>,
+}
+
+/// Run Algorithm 1 on the AGU slice of `p`.
+///
+/// `lod`, `dom`, `loops`, `reach` are computed on the **original**
+/// function, whose block structure the AGU clone shares.
+pub fn hoist_speculative_requests(
+    p: &mut DaeProgram,
+    lod: &LodAnalysis,
+    dom: &DomTree,
+    loops: &LoopInfo,
+    reach: &Reachability,
+) -> HoistResult {
+    let agu_idx = p.agu;
+    let mut result = HoistResult::default();
+
+    // ---- collect the hoist plan -------------------------------------------
+    // plan: srcBB -> ordered list of send instrs (with home block)
+    let mut plan: Vec<(BlockId, Vec<(InstrId, BlockId)>)> = Vec::new();
+    {
+        let agu = &p.module.funcs[agu_idx];
+        for &src in &lod.chain_heads {
+            let (region, enters_inner) = spec_region(agu, src, dom, loops);
+            if enters_inner {
+                // the source's region touches an inner loop: skip this
+                // source (requests inside the inner loop belong to their
+                // own innermost-loop sources)
+                result.refused.push((u32::MAX, format!("source {src} skipped: region enters an inner loop")));
+                continue;
+            }
+            let mut list: Vec<(InstrId, BlockId)> = Vec::new();
+            for &bb in &region {
+                if bb == src {
+                    continue;
+                }
+                for &iid in &agu.block(bb).instrs {
+                    if agu.instr(iid).op.is_send() {
+                        list.push((iid, bb));
+                    }
+                }
+            }
+            if !list.is_empty() {
+                plan.push((src, list));
+            }
+        }
+    }
+
+    // ---- safety refusals ----------------------------------------------------
+    // targets per request
+    let mut targets: HashMap<InstrId, Vec<BlockId>> = HashMap::new();
+    for (src, list) in &plan {
+        for (iid, _) in list {
+            targets.entry(*iid).or_default().push(*src);
+        }
+    }
+    let mut refused_instrs: HashSet<InstrId> = HashSet::new();
+    {
+        let agu = &p.module.funcs[agu_idx];
+        for (&iid, tgts) in &targets {
+            let mem = send_mem(agu, iid);
+            // data LoD on this op? (computed on original ids == agu ids)
+            if lod.data_lod.contains(&iid) {
+                refused_instrs.insert(iid);
+                result.refused.push((mem, "data LoD".into()));
+                continue;
+            }
+            // (1a) no two targets reach each other
+            let mut bad = false;
+            for &a in tgts {
+                for &b in tgts {
+                    if a != b && reach.reachable(a, b) {
+                        bad = true;
+                    }
+                }
+            }
+            if bad {
+                refused_instrs.insert(iid);
+                result.refused.push((mem, "spec sources reach one another".into()));
+                continue;
+            }
+            // (1b) coverage: home unreachable from loop header when all
+            // targets are removed
+            let home = agu
+                .blocks
+                .iter()
+                .position(|b| b.instrs.contains(&iid))
+                .map(|i| BlockId(i as u32))
+                .unwrap();
+            let start = loops
+                .innermost(home)
+                .map(|l| l.header)
+                .unwrap_or(agu.entry);
+            if reachable_avoiding(agu, start, home, tgts, dom) {
+                refused_instrs.insert(iid);
+                result.refused.push((mem, "home reachable around spec sources".into()));
+                continue;
+            }
+            // loads additionally need a single dominating target so §5.4
+            // can re-home the CU consume (see spec_load.rs), and no
+            // same-array store may precede them in the hoist plan: the
+            // re-homed consume would sit before those stores' produces in
+            // the CU while the DU's load RAW-waits on the stores — a
+            // genuine cycle (caught by the liveness property tests).
+            if matches!(agu.instr(iid).op, Op::SendLdAddr { .. }) {
+                let home = agu
+                    .blocks
+                    .iter()
+                    .position(|b| b.instrs.contains(&iid))
+                    .map(|i| BlockId(i as u32))
+                    .unwrap();
+                if tgts.len() != 1 || !dom.dominates(tgts[0], home) {
+                    refused_instrs.insert(iid);
+                    result.refused.push((mem, "load spec needs one dominating source".into()));
+                    continue;
+                }
+                let my_arr = send_array(&p.module, agu, iid);
+                let mut store_before = false;
+                'plan: for (src, list) in &plan {
+                    if *src != tgts[0] {
+                        continue;
+                    }
+                    for &(iid2, _) in list {
+                        if iid2 == iid {
+                            break 'plan;
+                        }
+                        if matches!(agu.instr(iid2).op, Op::SendStAddr { .. })
+                            && send_array(&p.module, agu, iid2) == my_arr
+                        {
+                            store_before = true;
+                            break 'plan;
+                        }
+                    }
+                }
+                if store_before {
+                    refused_instrs.insert(iid);
+                    result
+                        .refused
+                        .push((mem, "load spec behind a same-array store".into()));
+                    continue;
+                }
+            }
+        }
+    }
+    // (2) address-slice hoistability, availability-aware: a hoisted load's
+    // AGU consume moves with it (its value becomes available at the spec
+    // block for later requests, e.g. `A[w]` with `w = idx[i]`). Iterate to
+    // a fixpoint because refusing one request can invalidate another's
+    // slice.
+    loop {
+        let mut changed = false;
+        let agu = &p.module.funcs[agu_idx];
+        // consume result per mem (AGU side)
+        let consume_result: HashMap<u32, ValueId> = {
+            let mut map = HashMap::new();
+            for b in &agu.blocks {
+                for &iid in &b.instrs {
+                    if let Op::ConsumeVal { mem, .. } = agu.instr(iid).op {
+                        if let Some(r) = agu.instr(iid).result {
+                            map.insert(mem, r);
+                        }
+                    }
+                }
+            }
+            map
+        };
+        let mut extra: HashMap<BlockId, HashSet<ValueId>> = HashMap::new();
+        for (src, list) in &plan {
+            for &(iid, _home) in list {
+                if refused_instrs.contains(&iid) {
+                    continue;
+                }
+                let avail = extra.entry(*src).or_default().clone();
+                if clone_slice_plan(agu, iid, *src, dom, &avail).is_none() {
+                    refused_instrs.insert(iid);
+                    result
+                        .refused
+                        .push((send_mem(agu, iid), format!("address not hoistable to {src}")));
+                    changed = true;
+                    continue;
+                }
+                if let Op::SendLdAddr { mem, .. } = agu.instr(iid).op {
+                    if let Some(&r) = consume_result.get(&mem) {
+                        extra.entry(*src).or_default().insert(r);
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // All-or-nothing per array: the per-array request stream is served in
+    // ARRIVAL order, so partially hoisting ops on an array reorders
+    // loads/stores relative to refused (unhoisted) ones and breaks RAW
+    // disambiguation (a hoisted load can pass a same-address store left
+    // behind). Any refusal on an array therefore refuses every candidate
+    // op on that array — speculation degrades to plain DAE for that
+    // stream, never to a mis-compile.
+    {
+        let agu = &p.module.funcs[agu_idx];
+        let refused_arrays: HashSet<crate::ir::ArrayId> = refused_instrs
+            .iter()
+            .map(|&iid| send_array(&p.module, agu, iid))
+            .collect();
+        if !refused_arrays.is_empty() {
+            for (&iid, _) in &targets {
+                if refused_arrays.contains(&send_array(&p.module, agu, iid)) {
+                    refused_instrs.insert(iid);
+                }
+            }
+        }
+    }
+
+    // ---- execute the plan ----------------------------------------------------
+    let mut removed: HashSet<InstrId> = HashSet::new();
+    for (src, list) in &plan {
+        let mut reqs: Vec<SpecReq> = Vec::new();
+        for &(iid, home) in list {
+            if refused_instrs.contains(&iid) {
+                continue;
+            }
+            // clone address slice + the send itself into src
+            let agu = &mut p.module.funcs[agu_idx];
+            let slice = clone_slice_plan(agu, iid, *src, dom, &HashSet::new())
+                .expect("checked hoistable above");
+            let mut remap: HashMap<ValueId, ValueId> = HashMap::new();
+            for s in slice {
+                let mut op = agu.instr(s).op.clone();
+                remap_op(&mut op, &remap);
+                let old_res = agu.instr(s).result;
+                let new_iid = agu.create_instr(op);
+                agu.blocks[src.index()].instrs.push(new_iid);
+                if let (Some(o), Some(n)) = (old_res, agu.instr(new_iid).result) {
+                    remap.insert(o, n);
+                }
+            }
+            let mut send_op = agu.instr(iid).op.clone();
+            remap_op(&mut send_op, &remap);
+            let new_send = agu.create_instr(send_op);
+            agu.blocks[src.index()].instrs.push(new_send);
+            if !removed.contains(&iid) {
+                super::detach_instr(agu, iid);
+                removed.insert(iid);
+            }
+            // a hoisted load's AGU consume moves along (right after the
+            // send) so its value stays balanced and available here for
+            // later requests' address slices
+            if let Op::SendLdAddr { mem, .. } = agu.instr(new_send).op {
+                let mut found = None;
+                'c: for (bi, b) in agu.blocks.iter().enumerate() {
+                    for (pos, &ci) in b.instrs.iter().enumerate() {
+                        if let Op::ConsumeVal { mem: m2, .. } = agu.instr(ci).op {
+                            if m2 == mem {
+                                found = Some((bi, pos, ci));
+                                break 'c;
+                            }
+                        }
+                    }
+                }
+                if let Some((bi, pos, ci)) = found {
+                    if bi != src.index() {
+                        agu.blocks[bi].instrs.remove(pos);
+                        agu.blocks[src.index()].instrs.push(ci);
+                    }
+                }
+            }
+            let (mem, is_store, arr) = {
+                let agu = &p.module.funcs[agu_idx];
+                match agu.instr(new_send).op {
+                    Op::SendLdAddr { chan, mem, .. } => {
+                        (mem, false, p.module.chan(chan).arr)
+                    }
+                    Op::SendStAddr { chan, mem, .. } => {
+                        (mem, true, p.module.chan(chan).arr)
+                    }
+                    _ => unreachable!(),
+                }
+            };
+            reqs.push(SpecReq { mem, is_store, arr, true_bb: home });
+        }
+        if !reqs.is_empty() {
+            result.map.push((*src, reqs));
+        }
+    }
+
+    result
+}
+
+fn send_mem(f: &Function, iid: InstrId) -> u32 {
+    match f.instr(iid).op {
+        Op::SendLdAddr { mem, .. } | Op::SendStAddr { mem, .. } => mem,
+        _ => panic!("not a send"),
+    }
+}
+
+fn send_array(m: &crate::ir::Module, f: &Function, iid: InstrId) -> crate::ir::ArrayId {
+    match f.instr(iid).op {
+        Op::SendLdAddr { chan, .. } | Op::SendStAddr { chan, .. } => m.chan(chan).arr,
+        _ => panic!("not a send"),
+    }
+}
+
+/// The Algorithm 1 traversal region: blocks reachable from `src` in
+/// reverse post-order, staying inside `src`'s innermost loop, skipping
+/// backedges and edges into inner-loop headers ("we do not enter loops
+/// other than the innermost loop containing srcBB", §5.1). The second
+/// return is true when the frontier touched an inner-loop header — such
+/// sources are skipped wholesale (pending-list scans cannot cross an
+/// opaque inner loop soundly).
+pub fn spec_region(
+    f: &Function,
+    src: BlockId,
+    dom: &DomTree,
+    loops: &LoopInfo,
+) -> (Vec<BlockId>, bool) {
+    let own_loop = loops.innermost_idx(src);
+    let in_scope = |b: BlockId| -> bool {
+        match own_loop {
+            Some(li) => loops.loops[li].contains(b),
+            None => true,
+        }
+    };
+    let enters_inner = std::cell::Cell::new(false);
+    let region = crate::analysis::rpo::reverse_post_order_from(f, src, &|a, b| {
+        if dom.dominates(b, a) {
+            return true; // backedge
+        }
+        if !in_scope(b) {
+            return true; // leaves the loop (exit edge)
+        }
+        // entering a loop that is not src's innermost loop?
+        if loops.is_header(b) && loops.innermost_idx(b) != own_loop {
+            enters_inner.set(true);
+            return true;
+        }
+        false
+    });
+    (region, enters_inner.get())
+}
+
+/// Can a path reach `target` from `start` (forward edges, within scope)
+/// while avoiding every block in `avoid`?
+fn reachable_avoiding(
+    f: &Function,
+    start: BlockId,
+    target: BlockId,
+    avoid: &[BlockId],
+    dom: &DomTree,
+) -> bool {
+    if avoid.contains(&start) {
+        return false;
+    }
+    let mut seen = vec![false; f.num_blocks()];
+    let mut stack = vec![start];
+    seen[start.index()] = true;
+    while let Some(b) = stack.pop() {
+        if b == target {
+            return true;
+        }
+        for s in f.succs(b) {
+            if dom.dominates(s, b) {
+                continue; // backedge
+            }
+            if avoid.contains(&s) || seen[s.index()] {
+                continue;
+            }
+            seen[s.index()] = true;
+            stack.push(s);
+        }
+    }
+    false
+}
+
+/// Plan the clone of `send`'s address slice at the end of `src`: the
+/// instructions (in dependency order) that must be duplicated because
+/// their definitions are not available at `src`. Returns `None` if the
+/// slice is not hoistable (φ, channel op, or side effect in the way).
+fn clone_slice_plan(
+    f: &Function,
+    send: InstrId,
+    src: BlockId,
+    dom: &DomTree,
+    extra: &HashSet<ValueId>,
+) -> Option<Vec<InstrId>> {
+    let instr_blocks = super::instr_blocks(f);
+    // available at end of src := def block strictly dominates src, or def
+    // is inside src itself, or an earlier hoist will have moved it there
+    // (`extra` — consume results of already-hoisted loads).
+    let available = |v: ValueId| -> bool {
+        if extra.contains(&v) {
+            return true;
+        }
+        match f.value(v).def {
+            ValueDef::Param(_) => true,
+            ValueDef::Instr(iid) => match instr_blocks[iid.index()] {
+                Some(bb) => bb == src || dom.strictly_dominates(bb, src),
+                None => false, // detached
+            },
+        }
+    };
+
+    let idx = match f.instr(send).op {
+        Op::SendLdAddr { idx, .. } | Op::SendStAddr { idx, .. } => idx,
+        _ => return None,
+    };
+
+    let mut order: Vec<InstrId> = Vec::new();
+    let mut seen: HashSet<InstrId> = HashSet::new();
+
+    // DFS producing dependency (post-) order.
+    fn visit(
+        f: &Function,
+        v: ValueId,
+        available: &dyn Fn(ValueId) -> bool,
+        seen: &mut HashSet<InstrId>,
+        order: &mut Vec<InstrId>,
+    ) -> bool {
+        if available(v) {
+            return true;
+        }
+        let ValueDef::Instr(iid) = f.value(v).def else { return false };
+        if seen.contains(&iid) {
+            return true;
+        }
+        let op = &f.instr(iid).op;
+        let pure = matches!(
+            op,
+            Op::ConstI(_)
+                | Op::ConstF(_)
+                | Op::ConstB(_)
+                | Op::IBin(..)
+                | Op::FBin(..)
+                | Op::ICmp(..)
+                | Op::FCmp(..)
+                | Op::Not(_)
+                | Op::Select { .. }
+                | Op::IToF(_)
+                | Op::FToI(_)
+        );
+        if !pure {
+            return false; // φ, consume, load… not cloneable
+        }
+        seen.insert(iid);
+        for u in op.uses() {
+            if !visit(f, u, available, seen, order) {
+                return false;
+            }
+        }
+        order.push(iid);
+        true
+    }
+
+    if visit(f, idx, &available, &mut seen, &mut order) {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+fn remap_op(op: &mut Op, remap: &HashMap<ValueId, ValueId>) {
+    for (old, new) in remap {
+        op.replace_use(*old, *new);
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::analysis::LodAnalysis;
+    use crate::ir::parser::parse_single;
+    use crate::transform::decouple::decouple;
+
+    /// Paper Figure 3a: three stores under nested LoD branches.
+    pub const FIG3: &str = r#"
+array @A : i64[100]
+
+func @fig3(%n: i64) {
+entry:
+  %c1 = const.i 1
+  br header
+header:
+  %i = phi i64 [entry: %c1], [latch: %inext]
+  %nm1 = sub.i %n, %c1
+  %cc = icmp.lt %i, %nm1
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, pos, neg
+pos:
+  %max1 = const.i 50
+  %q = icmp.lt %a, %max1
+  condbr %q, st0b, st1b
+st0b:
+  %ip1 = add.i %i, %c1
+  %av0 = add.i %a, %c1
+  store @A[%ip1], %av0
+  br latch
+st1b:
+  %im1 = sub.i %i, %c1
+  %av1 = add.i %a, %c1
+  store @A[%im1], %av1
+  br latch
+neg:
+  %av2 = add.i %a, %c1
+  store @A[%i], %av2
+  br latch
+latch:
+  %inext = add.i %i, %c1
+  br header
+exit:
+  ret
+}
+"#;
+
+    #[test]
+    fn fig3_hoists_all_three_stores_to_body() {
+        let (m, f) = parse_single(FIG3).unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        // chain heads: only `body` (pos is chained behind it, §5.1.2)
+        let body = BlockId(2);
+        assert_eq!(lod.chain_heads, vec![body], "src={:?}", lod.src_blocks);
+
+        let dom = DomTree::new(&f);
+        let loops = LoopInfo::new(&f, &dom);
+        let reach = Reachability::new(&f, &dom);
+        let mut p = decouple(&m, &f, false);
+        let hr = hoist_speculative_requests(&mut p, &lod, &dom, &loops, &reach);
+        assert!(hr.refused.is_empty(), "{:?}", hr.refused);
+        assert_eq!(hr.map.len(), 1);
+        let (src, reqs) = &hr.map[0];
+        assert_eq!(*src, body);
+        // topological order of homes: st0b(4) and st1b(5) in RPO before?
+        // region RPO from body: pos, st0b, st1b (or st1b, st0b), neg, latch.
+        // All three stores hoisted; store to A[i] (mem of `neg`) last or
+        // per RPO.
+        assert_eq!(reqs.len(), 3);
+        let homes: Vec<u32> = reqs.iter().map(|r| r.true_bb.0).collect();
+        // all three homes present
+        assert!(homes.contains(&4) && homes.contains(&5) && homes.contains(&6));
+        // topological: pos-side stores (4,5) come before... neg(6) is a
+        // sibling branch; RPO interleaving just needs consistency, checked
+        // by the Lemma 6.1 property tests. Here: verify sends moved.
+        let agu = p.agu_fn();
+        let body_sends = agu
+            .block(body)
+            .instrs
+            .iter()
+            .filter(|&&i| agu.instr(i).op.is_send())
+            .count();
+        assert_eq!(body_sends, 4, "A-load send + 3 hoisted store sends");
+        crate::ir::verify::verify_function(&p.module, agu).unwrap();
+    }
+
+    #[test]
+    fn refuses_unhoistable_phi_address() {
+        // the store address flows through a φ computed *inside* the LoD
+        // region (below the spec source) — cannot clone at srcBB.
+        let (m, f) = parse_single(
+            r#"
+array @A : i64[100]
+
+func @phiaddr(%n: i64) {
+entry:
+  %c0 = const.i 0
+  %c1 = const.i 1
+  %c2 = const.i 2
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %p = icmp.gt %a, %c0
+  condbr %p, inner, latch
+inner:
+  %par = rem.i %i, %c2
+  %pp = icmp.eq %par, %c0
+  condbr %pp, t, e
+t:
+  %x1 = add.i %i, %c1
+  br join
+e:
+  %x2 = sub.i %i, %c1
+  br join
+join:
+  %x = phi i64 [t: %x1], [e: %x2]
+  store @A[%x], %a
+  br latch
+latch:
+  %inext = add.i %i, %c1
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        let dom = DomTree::new(&f);
+        let loops = LoopInfo::new(&f, &dom);
+        let reach = Reachability::new(&f, &dom);
+        let mut p = decouple(&m, &f, false);
+        let hr = hoist_speculative_requests(&mut p, &lod, &dom, &loops, &reach);
+        assert!(
+            hr.refused.iter().any(|(_, why)| why.contains("not hoistable")),
+            "{:?}",
+            hr.refused
+        );
+        assert!(hr.map.is_empty(), "all-or-nothing per array");
+    }
+}

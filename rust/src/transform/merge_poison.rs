@@ -1,0 +1,152 @@
+//! §5.3 — merging poison blocks.
+//!
+//! Two poison blocks can merge when they contain the same list of poison
+//! calls and share the same immediate successor; predecessors of the
+//! duplicate retarget to the representative and the duplicate is
+//! detached. φs in the common successor must agree between the two arms
+//! (they do for pure poison blocks, which define nothing).
+
+use crate::ir::{BlockId, Function, Op, Terminator};
+
+/// Merge equivalent poison blocks in `f`; returns the number of blocks
+/// removed. `is_poison_block` selects candidates (by construction their
+/// names start with `poison_`).
+pub fn run(f: &mut Function) -> usize {
+    let mut removed = 0;
+    loop {
+        let reach = crate::transform::simplify_cfg::reachable_blocks(f);
+        let candidates: Vec<BlockId> = (0..f.num_blocks() as u32)
+            .map(BlockId)
+            .filter(|b| reach[b.index()] && f.block(*b).name.starts_with("poison_"))
+            .collect();
+
+        let mut merged_this_round = false;
+        'outer: for i in 0..candidates.len() {
+            for j in i + 1..candidates.len() {
+                let (a, b) = (candidates[i], candidates[j]);
+                if !mergeable(f, a, b) {
+                    continue;
+                }
+                // retarget b's preds to a
+                let preds = f.preds();
+                for &p in &preds[b.index()] {
+                    f.block_mut(p).term.replace_succ(b, a);
+                }
+                // fix φs in the common successor: drop the arm for b
+                if let Terminator::Br(succ) = f.block(a).term {
+                    let instrs = f.block(succ).instrs.clone();
+                    for iid in instrs {
+                        if let Op::Phi { incomings, .. } = &mut f.instr_mut(iid).op {
+                            incomings.retain(|(bb, _)| *bb != b);
+                        }
+                    }
+                }
+                f.block_mut(b).instrs.clear();
+                f.block_mut(b).term = Terminator::Ret;
+                removed += 1;
+                merged_this_round = true;
+                break 'outer;
+            }
+        }
+        if !merged_this_round {
+            break;
+        }
+    }
+    removed
+}
+
+fn mergeable(f: &Function, a: BlockId, b: BlockId) -> bool {
+    let (ba, bb) = (f.block(a), f.block(b));
+    // same single successor
+    let (Terminator::Br(sa), Terminator::Br(sb)) = (&ba.term, &bb.term) else {
+        return false;
+    };
+    if sa != sb {
+        return false;
+    }
+    // identical poison call lists (chan, mem, pred)
+    if ba.instrs.len() != bb.instrs.len() {
+        return false;
+    }
+    for (&ia, &ib) in ba.instrs.iter().zip(&bb.instrs) {
+        match (&f.instr(ia).op, &f.instr(ib).op) {
+            (
+                Op::PoisonVal { chan: c1, mem: m1, pred: p1 },
+                Op::PoisonVal { chan: c2, mem: m2, pred: p2 },
+            ) if c1 == c2 && m1 == m2 && p1 == p2 => {}
+            _ => return false,
+        }
+    }
+    // φs in the successor must agree for arms a and b
+    for &iid in &f.block(*sa).instrs {
+        if let Op::Phi { incomings, .. } = &f.instr(iid).op {
+            let va = incomings.iter().find(|(bb2, _)| *bb2 == a).map(|(_, v)| *v);
+            let vb = incomings.iter().find(|(bb2, _)| *bb2 == b).map(|(_, v)| *v);
+            if va != vb {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_single;
+
+    #[test]
+    fn merges_identical_poison_blocks() {
+        let (_m, mut f) = parse_single(
+            r#"
+array @A : i64[8]
+chan ch0 : st_val @A
+
+func @f(%c: b1) {
+entry:
+  condbr %c, poison_a, poison_b
+poison_a:
+  poison_val ch0:m1
+  poison_val ch0:m2
+  br join
+poison_b:
+  poison_val ch0:m1
+  poison_val ch0:m2
+  br join
+join:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let removed = run(&mut f);
+        assert_eq!(removed, 1);
+        let n = crate::transform::simplify_cfg::num_reachable_blocks(&f);
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn different_lists_do_not_merge() {
+        let (_m, mut f) = parse_single(
+            r#"
+array @A : i64[8]
+chan ch0 : st_val @A
+
+func @f(%c: b1) {
+entry:
+  condbr %c, poison_a, poison_b
+poison_a:
+  poison_val ch0:m1
+  br join
+poison_b:
+  poison_val ch0:m2
+  br join
+join:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        assert_eq!(run(&mut f), 0);
+    }
+}

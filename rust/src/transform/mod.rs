@@ -1,0 +1,55 @@
+//! The paper's compiler transformations.
+//!
+//! - [`decouple`] — §3.2: split the original function into AGU and CU
+//!   slices communicating over per-array FIFO streams.
+//! - [`hoist`] — Algorithm 1: speculative hoisting of memory requests in
+//!   the AGU to LoD chain-head source blocks, in reverse post-order.
+//! - [`poison`] — Algorithms 2 + 3: placing poison (store-invalidate)
+//!   calls in the CU such that on every path the value/poison order
+//!   matches the AGU's speculative request order (Lemma 6.1).
+//! - [`merge_poison`] — §5.3: merging equivalent poison blocks.
+//! - [`spec_load`] — §5.4: speculative load consumption.
+//! - [`oracle`] — §8.1.1: manual LoD removal (functionally wrong upper
+//!   bound).
+//! - [`dce`] / [`simplify_cfg`] — the standard cleanups §3.2 step 3 calls
+//!   for.
+//! - [`pipeline`] — composes everything into the four evaluated
+//!   architectures: STA, DAE, SPEC, ORACLE.
+
+pub mod dce;
+pub mod decouple;
+pub mod hoist;
+pub mod merge_poison;
+pub mod oracle;
+pub mod pipeline;
+pub mod poison;
+pub mod simplify_cfg;
+pub mod spec_load;
+
+pub use decouple::{decouple, DaeProgram};
+pub use hoist::{hoist_speculative_requests, HoistResult, SpecReq, SpecReqMap};
+pub use pipeline::{build, Arch, Compiled};
+pub use poison::{place_poisons, PoisonStats};
+
+use crate::ir::{BlockId, Function, InstrId};
+
+/// Find the block containing each instruction (id-indexed dense map).
+pub(crate) fn instr_blocks(f: &Function) -> Vec<Option<BlockId>> {
+    let mut map = vec![None; f.instrs.len()];
+    for (bi, b) in f.blocks.iter().enumerate() {
+        for &iid in &b.instrs {
+            map[iid.index()] = Some(BlockId(bi as u32));
+        }
+    }
+    map
+}
+
+/// Remove `iid` from whatever block contains it.
+pub(crate) fn detach_instr(f: &mut Function, iid: InstrId) {
+    for b in &mut f.blocks {
+        if let Some(pos) = b.instrs.iter().position(|&i| i == iid) {
+            b.instrs.remove(pos);
+            return;
+        }
+    }
+}

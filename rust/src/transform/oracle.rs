@@ -1,0 +1,209 @@
+//! ORACLE construction — paper §8.1.1.
+//!
+//! "The same as DAE, but all LoD control dependencies are removed
+//! manually from the input code. The ORACLE results are wrong, but give a
+//! bound on the performance of SPEC and show its area overhead."
+//!
+//! We mechanise the manual edit: every memory op with a control LoD is
+//! moved (with its full operand slice, *including loads*) to its chain-
+//! head source block, making it unconditional. The resulting function
+//! then decouples with no loss of decoupling. Functional results differ
+//! from the original program wherever the guard would have been false —
+//! by design.
+
+use crate::analysis::{DomTree, LodAnalysis, LoopInfo, Reachability};
+use crate::ir::{Function, InstrId, Module, Op, ValueDef, ValueId};
+use std::collections::{HashMap, HashSet};
+
+/// Flatten LoD control dependencies in `f`. Returns the rewritten
+/// function and the number of ops it could not flatten (left guarded).
+pub fn flatten_lod(m: &Module, f: &Function) -> (Function, usize) {
+    let mut out = f.clone();
+    out.name = format!("{}__oracle", f.name);
+    let lod = LodAnalysis::new(m, f);
+    let dom = DomTree::new(f);
+    let loops = LoopInfo::new(f, &dom);
+    let reach = Reachability::new(f, &dom);
+    let _ = reach;
+
+    let mut skipped = 0usize;
+
+    // plan: (memory op instr, target chain head)
+    let mut plan: Vec<(InstrId, crate::ir::BlockId)> = Vec::new();
+    for &src in &lod.chain_heads {
+        let (region, enters_inner) = super::hoist::spec_region(f, src, &dom, &loops);
+        if enters_inner {
+            skipped += 1;
+            continue;
+        }
+        for &bb in &region {
+            if bb == src {
+                continue;
+            }
+            for &iid in &f.block(bb).instrs {
+                if f.instr(iid).op.is_memory() && !plan.iter().any(|(i, _)| *i == iid) {
+                    plan.push((iid, src));
+                }
+            }
+        }
+    }
+
+    for (iid, src) in plan {
+        // full operand slice (loads allowed — ORACLE accepts wrong values)
+        let roots: Vec<ValueId> = out.instr(iid).op.uses();
+        let Some(slice) = clone_slice_with_loads(&out, &roots, src, &dom) else {
+            skipped += 1;
+            continue;
+        };
+        let mut remap: HashMap<ValueId, ValueId> = HashMap::new();
+        for s in slice {
+            let mut op = out.instr(s).op.clone();
+            for (o, n) in &remap {
+                op.replace_use(*o, *n);
+            }
+            let old_res = out.instr(s).result;
+            let nid = out.create_instr(op);
+            out.blocks[src.index()].instrs.push(nid);
+            if let (Some(o), Some(n)) = (old_res, out.instr(nid).result) {
+                remap.insert(o, n);
+            }
+        }
+        let mut op = out.instr(iid).op.clone();
+        for (o, n) in &remap {
+            op.replace_use(*o, *n);
+        }
+        let nid = out.create_instr(op);
+        out.blocks[src.index()].instrs.push(nid);
+        // replace uses of the original op's result (loads) with the clone
+        if let (Some(o), Some(n)) = (out.instr(iid).result, out.instr(nid).result) {
+            out.replace_all_uses(o, n);
+        }
+        super::detach_instr(&mut out, iid);
+    }
+
+    // the guards may now be dead — cleanup
+    super::dce::run(&mut out);
+    super::simplify_cfg::run(&mut out);
+    (out, skipped)
+}
+
+/// Like `hoist::clone_slice_plan` but with loads permitted in the slice
+/// (ORACLE semantics) and multiple roots.
+fn clone_slice_with_loads(
+    f: &Function,
+    roots: &[ValueId],
+    src: crate::ir::BlockId,
+    dom: &DomTree,
+) -> Option<Vec<InstrId>> {
+    let instr_blocks = super::instr_blocks(f);
+    let available = |v: ValueId| -> bool {
+        match f.value(v).def {
+            ValueDef::Param(_) => true,
+            ValueDef::Instr(iid) => match instr_blocks[iid.index()] {
+                Some(bb) => bb == src || dom.strictly_dominates(bb, src),
+                None => false,
+            },
+        }
+    };
+    let mut order: Vec<InstrId> = Vec::new();
+    let mut seen: HashSet<InstrId> = HashSet::new();
+
+    fn visit(
+        f: &Function,
+        v: ValueId,
+        available: &dyn Fn(ValueId) -> bool,
+        seen: &mut HashSet<InstrId>,
+        order: &mut Vec<InstrId>,
+    ) -> bool {
+        if available(v) {
+            return true;
+        }
+        let ValueDef::Instr(iid) = f.value(v).def else { return false };
+        if seen.contains(&iid) {
+            return true;
+        }
+        let op = &f.instr(iid).op;
+        let ok = !matches!(op, Op::Phi { .. } | Op::Store { .. })
+            && !matches!(
+                op,
+                Op::SendLdAddr { .. }
+                    | Op::SendStAddr { .. }
+                    | Op::ConsumeVal { .. }
+                    | Op::ProduceVal { .. }
+                    | Op::PoisonVal { .. }
+            );
+        if !ok {
+            return false;
+        }
+        seen.insert(iid);
+        for u in op.uses() {
+            if !visit(f, u, available, seen, order) {
+                return false;
+            }
+        }
+        order.push(iid);
+        true
+    }
+
+    for &r in roots {
+        if !visit(f, r, &available, &mut seen, &mut order) {
+            return None;
+        }
+    }
+    Some(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::LodAnalysis;
+    use crate::ir::parser::parse_single;
+
+    #[test]
+    fn oracle_removes_lod() {
+        let (m, f) = parse_single(
+            r#"
+array @A : i64[100]
+array @idx : i64[100]
+
+func @fig1c(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %fv = add.i %aw, %c1
+  store @A[%w], %fv
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let (oracle, skipped) = flatten_lod(&m, &f);
+        assert_eq!(skipped, 0);
+        crate::ir::verify::verify_function(&m, &oracle).unwrap();
+        let lod2 = LodAnalysis::new(&m, &oracle);
+        assert!(
+            lod2.control_lod.is_empty(),
+            "oracle must have no control LoD left: {:?}",
+            lod2.control_lod
+        );
+    }
+}

@@ -1,0 +1,205 @@
+//! Pass pipelines for the four evaluated architectures (paper §8.1.1):
+//!
+//! - **STA** — the original function, simulated with static-schedule
+//!   memory semantics (in-order ambiguous loads).
+//! - **DAE** — §3.2 decoupling, no speculation: LoD branches synchronise
+//!   the AGU on DU values.
+//! - **SPEC** — DAE + the paper's contribution: Algorithm 1 hoisting,
+//!   Algorithms 2+3 poisoning, §5.3 merging, §5.4 speculative loads.
+//! - **ORACLE** — LoD removed from the input (wrong results, perf bound),
+//!   then plain DAE.
+
+use super::decouple::{decouple, refresh_consumes, DaeProgram};
+use super::hoist::{hoist_speculative_requests, SpecReqMap};
+use super::poison::{place_poisons, PoisonStats};
+use super::{dce, merge_poison, oracle, simplify_cfg, spec_load};
+use crate::analysis::{DomTree, LodAnalysis, LoopInfo, Reachability};
+use crate::ir::{Function, Module};
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Sta,
+    Dae,
+    Spec,
+    Oracle,
+}
+
+impl Arch {
+    pub const ALL: [Arch; 4] = [Arch::Sta, Arch::Dae, Arch::Spec, Arch::Oracle];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::Sta => "STA",
+            Arch::Dae => "DAE",
+            Arch::Spec => "SPEC",
+            Arch::Oracle => "ORACLE",
+        }
+    }
+}
+
+/// Per-build statistics feeding Table 1 and Fig. 7.
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    pub poison_blocks: usize,
+    pub poison_calls: usize,
+    pub merged_blocks: usize,
+    pub refused: Vec<(u32, String)>,
+    pub spec_loads_moved: usize,
+}
+
+/// A compiled architecture: either a monolithic function (STA) or a
+/// decoupled program (DAE/SPEC/ORACLE).
+pub enum Compiled {
+    Monolithic { module: Module, arch: Arch },
+    Dae { program: DaeProgram, arch: Arch, map: Option<SpecReqMap>, stats: BuildStats },
+}
+
+impl Compiled {
+    pub fn arch(&self) -> Arch {
+        match self {
+            Compiled::Monolithic { arch, .. } => *arch,
+            Compiled::Dae { arch, .. } => *arch,
+        }
+    }
+
+    pub fn stats(&self) -> Option<&BuildStats> {
+        match self {
+            Compiled::Monolithic { .. } => None,
+            Compiled::Dae { stats, .. } => Some(stats),
+        }
+    }
+}
+
+/// Compile `(m, f)` — `f` must be `m.funcs[func_idx]` — for `arch`.
+pub fn build(m: &Module, func_idx: usize, arch: Arch) -> Result<Compiled> {
+    let f = &m.funcs[func_idx];
+    match arch {
+        Arch::Sta => {
+            let module = Module {
+                arrays: m.arrays.clone(),
+                chans: vec![],
+                funcs: vec![f.clone()],
+            };
+            Ok(Compiled::Monolithic { module, arch })
+        }
+        Arch::Dae => {
+            let mut p = decouple(m, f, true);
+            simplify_cfg::run(&mut p.module.funcs[0]);
+            simplify_cfg::run(&mut p.module.funcs[1]);
+            refresh_consumes(&mut p);
+            crate::ir::verify::verify_module(&p.module)?;
+            Ok(Compiled::Dae { program: p, arch, map: None, stats: BuildStats::default() })
+        }
+        Arch::Spec => {
+            let lod = LodAnalysis::new(m, f);
+            let dom = DomTree::new(f);
+            let loops = LoopInfo::new(f, &dom);
+            let reach = Reachability::new(f, &dom);
+            let mut p = decouple(m, f, false);
+            let hr = hoist_speculative_requests(&mut p, &lod, &dom, &loops, &reach);
+            let pstats: PoisonStats = place_poisons(&mut p, &hr.map)?;
+            let moved = spec_load::hoist_spec_load_consumes(&mut p, &hr.map);
+            let agu_idx = p.agu;
+            let cu_idx = p.cu;
+            dce::run(&mut p.module.funcs[agu_idx]);
+            dce::run(&mut p.module.funcs[cu_idx]);
+            let merged = merge_poison::run(&mut p.module.funcs[cu_idx]);
+            // simplify + a second DCE round: folding the emptied guard
+            // branch (condbr with identical targets) kills the guard
+            // condition and, in the AGU, the consume feeding it — that
+            // final cut is what restores full decoupling.
+            for fi in [agu_idx, cu_idx] {
+                simplify_cfg::run(&mut p.module.funcs[fi]);
+                dce::run(&mut p.module.funcs[fi]);
+                simplify_cfg::run(&mut p.module.funcs[fi]);
+            }
+            refresh_consumes(&mut p);
+            crate::ir::verify::verify_module(&p.module)?;
+            let stats = BuildStats {
+                poison_blocks: pstats.poison_blocks.saturating_sub(merged),
+                poison_calls: pstats.poison_calls,
+                merged_blocks: merged,
+                refused: hr.refused.clone(),
+                spec_loads_moved: moved,
+            };
+            Ok(Compiled::Dae { program: p, arch, map: Some(hr.map), stats })
+        }
+        Arch::Oracle => {
+            let (of, skipped) = oracle::flatten_lod(m, f);
+            let mut p = decouple(m, &of, true);
+            simplify_cfg::run(&mut p.module.funcs[0]);
+            simplify_cfg::run(&mut p.module.funcs[1]);
+            refresh_consumes(&mut p);
+            crate::ir::verify::verify_module(&p.module)?;
+            let stats = BuildStats {
+                refused: if skipped > 0 {
+                    vec![(u32::MAX, format!("{skipped} ops kept guarded"))]
+                } else {
+                    vec![]
+                },
+                ..Default::default()
+            };
+            Ok(Compiled::Dae { program: p, arch, map: None, stats })
+        }
+    }
+}
+
+/// Convenience: the single function of a monolithic build.
+pub fn mono_fn(c: &Compiled) -> Option<&Function> {
+    match c {
+        Compiled::Monolithic { module, .. } => Some(&module.funcs[0]),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    #[test]
+    fn all_archs_build_fig1c() {
+        let src = r#"
+array @A : i64[100]
+array @idx : i64[100]
+
+func @fig1c(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %fv = add.i %aw, %c1
+  store @A[%w], %fv
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#;
+        let m = parse_module(src).unwrap();
+        for arch in Arch::ALL {
+            let c = build(&m, 0, arch).unwrap_or_else(|e| panic!("{arch:?}: {e}"));
+            if let Compiled::Dae { stats, .. } = &c {
+                if arch == Arch::Spec {
+                    assert_eq!(stats.poison_calls, 1, "fig1c has one poisoned store");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,692 @@
+//! Algorithms 2 + 3 — poisoning mis-speculated stores in the CU (§5.2).
+//!
+//! ## Paper formulation vs. this implementation
+//!
+//! Algorithm 2 enumerates *every path* from each spec block to the loop
+//! latch, scanning a pending list of speculated requests per path and
+//! deduplicating poison insertions per `(edge, request)`. We implement an
+//! equivalent **edge-local** form built on an invariant the paper's proof
+//! implies but never states: with the scan rules
+//!
+//! - pop the front request when the edge destination is its `trueBB`
+//!   (used; stop scanning this edge — paper line 13),
+//! - pop-and-poison the front request while its `trueBB` is unreachable
+//!   from the destination (paper line 14-17),
+//! - otherwise stop (the prose rule: an unreachable later request must
+//!   wait for an earlier still-usable one),
+//!
+//! the pending list *after* scanning every edge into a block `s` is the
+//! same on all paths, because (a) all paths start with the same list at
+//! `specBB`, (b) "used at `s`" and "dead at `s`" are path-independent
+//! facts of the forward DAG, and (c) within-DAG acyclicity means a
+//! visited `trueBB` can never be forward-reachable again. We therefore
+//! propagate one pending list per block in topological order — O(E·R)
+//! instead of exponential — and **assert** list agreement at joins, which
+//! dynamically re-checks the invariant on every compile. A literal
+//! all-paths implementation ([`poison_plan_naive`]) is kept for
+//! cross-validation in tests.
+//!
+//! Algorithm 3 placement cases map as follows:
+//! - case 1/2 (conflict or no dominance) → a poison block on the edge
+//!   ([`Place::OnEdge`]), with a steering *predicate* instead of steering
+//!   branches when `specBB` does not dominate the edge source (the paper
+//!   itself notes the equivalence with predication in §9);
+//! - case 3 → poison prepended to the destination block, after φs
+//!   ([`Place::Prologue`]).
+//!
+//! Iteration-final edges (the loop backedge, or a loop/function exit)
+//! poison every remaining pending request — this covers LoD loop *exit*
+//! conditions (`while (A[i] ...)`), where the AGU over-runs by design.
+
+use super::decouple::DaeProgram;
+use super::hoist::{spec_region, SpecReq, SpecReqMap};
+use crate::analysis::{DomTree, LoopInfo, Reachability};
+use crate::ir::{BlockId, ChanKind, Function, Op, Type, ValueId};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct PoisonStats {
+    /// New blocks created on edges (paper Table 1 "Poison Blocks",
+    /// pre-merge; `merge_poison` reduces this).
+    pub poison_blocks: usize,
+    /// Static poison calls inserted (paper Table 1 "Poison Calls").
+    pub poison_calls: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum Place {
+    /// Poison at the top of `block` (after φs), order given by `seq`.
+    Prologue { block: BlockId },
+    /// Poison in a (shared) block created on the `from -> to` edge.
+    OnEdge { from: BlockId, to: BlockId },
+}
+
+#[derive(Clone, Debug)]
+struct PlannedPoison {
+    mem: u32,
+    arr: crate::ir::ArrayId,
+    place: Place,
+    /// Guard with the specBB steering flag (Algorithm 3 case 2).
+    guard: Option<BlockId>, // specBB whose flag guards this poison
+    seq: usize,
+}
+
+/// Run Algorithms 2 + 3 on the CU slice of `p` given the hoist map.
+pub fn place_poisons(p: &mut DaeProgram, map: &SpecReqMap) -> Result<PoisonStats> {
+    let cu_idx = p.cu;
+
+    // Analyses on the *pre-modification* CU (same structure as the AGU at
+    // hoist time).
+    let (plan, needs_flag) = {
+        let cu = &p.module.funcs[cu_idx];
+        let dom = DomTree::new(cu);
+        let loops = LoopInfo::new(cu, &dom);
+        let reach = Reachability::new(cu, &dom);
+        compute_plan(cu, map, &dom, &loops, &reach)?
+    };
+
+    // Build steering-flag networks for spec blocks that need them.
+    let mut flags: HashMap<BlockId, Vec<Option<ValueId>>> = HashMap::new();
+    {
+        let dom = DomTree::new(&p.module.funcs[cu_idx]);
+        let loops = LoopInfo::new(&p.module.funcs[cu_idx], &dom);
+        for &spec_bb in &needs_flag {
+            let net = build_flag_network(&mut p.module.funcs[cu_idx], spec_bb, &loops);
+            flags.insert(spec_bb, net);
+        }
+    }
+
+    // Apply: group OnEdge placements per edge, split each edge once.
+    let mut stats = PoisonStats::default();
+    let mut edge_blocks: HashMap<(BlockId, BlockId), BlockId> = HashMap::new();
+    let mut sorted = plan;
+    sorted.sort_by_key(|pp| pp.seq);
+
+    let cu = &mut p.module.funcs[cu_idx];
+    // Prologue insert positions per block: after φs; track how many
+    // prologue poisons were already inserted to preserve seq order.
+    let mut prologue_counts: HashMap<BlockId, usize> = HashMap::new();
+
+    for pp in &sorted {
+        let chan = p.module.chans
+            .iter()
+            .position(|c| c.kind == ChanKind::StVal && c.arr == pp.arr)
+            .map(|i| crate::ir::ChanId(i as u32))
+            .expect("st_val channel exists for speculated store");
+        let pred = pp.guard.map(|spec_bb| {
+            let place_block = match pp.place {
+                Place::Prologue { block } => block,
+                Place::OnEdge { from, .. } => from,
+            };
+            flags[&spec_bb][place_block.index()]
+                .expect("flag defined for region block")
+        });
+        let op = Op::PoisonVal { chan, mem: pp.mem, pred };
+        match pp.place {
+            Place::Prologue { block } => {
+                let iid = cu.create_instr(op);
+                let insts = &mut cu.blocks[block.index()].instrs;
+                let mut pos = 0;
+                while pos < insts.len()
+                    && matches!(cu.instrs[insts[pos].index()].op, Op::Phi { .. })
+                {
+                    pos += 1;
+                }
+                let off = prologue_counts.entry(block).or_insert(0);
+                insts.insert(pos + *off, iid);
+                *off += 1;
+            }
+            Place::OnEdge { from, to } => {
+                let pb = *edge_blocks.entry((from, to)).or_insert_with(|| {
+                    stats.poison_blocks += 1;
+                    cu.split_edge(from, to, &format!("poison_{}_{}", from.0, to.0))
+                });
+                let iid = cu.create_instr(op);
+                cu.blocks[pb.index()].instrs.push(iid);
+            }
+        }
+        stats.poison_calls += 1;
+    }
+
+    Ok(stats)
+}
+
+/// Edge-local Algorithm 2: compute all planned poisons. Returns the plan
+/// plus the set of spec blocks whose steering flag is needed.
+fn compute_plan(
+    cu: &Function,
+    map: &SpecReqMap,
+    dom: &DomTree,
+    loops: &LoopInfo,
+    reach: &Reachability,
+) -> Result<(Vec<PlannedPoison>, Vec<BlockId>)> {
+    let mut plan: Vec<PlannedPoison> = Vec::new();
+    let mut needs_flag: Vec<BlockId> = Vec::new();
+    let mut seq = 0usize;
+
+    for (spec_bb, reqs) in map {
+        let spec_bb = *spec_bb;
+        // Group requests by trueBB preserving order (paper: trueBlocks is
+        // an insertion-ordered set; same-block requests resolve together).
+        let mut tbs: Vec<(BlockId, Vec<&SpecReq>)> = Vec::new();
+        for r in reqs {
+            if !r.is_store {
+                continue; // speculative loads are handled by §5.4, not poisoned
+            }
+            match tbs.last_mut() {
+                Some((bb, list)) if *bb == r.true_bb => list.push(r),
+                _ => tbs.push((r.true_bb, vec![r])),
+            }
+        }
+        if tbs.is_empty() {
+            continue;
+        }
+        // sanity: a trueBB appearing twice non-adjacently would break the
+        // set semantics
+        for i in 0..tbs.len() {
+            for j in i + 1..tbs.len() {
+                if tbs[i].0 == tbs[j].0 {
+                    bail!("trueBB {} appears non-adjacently in spec list", tbs[i].0);
+                }
+            }
+        }
+
+        let (region, enters_inner) = spec_region(cu, spec_bb, dom, loops);
+        if enters_inner {
+            bail!("spec region of {spec_bb} enters an inner loop (hoist should have skipped it)");
+        }
+        let own_loop = loops.innermost_idx(spec_bb);
+        let in_region = {
+            let mut v = vec![false; cu.num_blocks()];
+            for &b in &region {
+                v[b.index()] = true;
+            }
+            v
+        };
+
+        // pending list (tb indices) per region block
+        let mut pending_at: HashMap<BlockId, Vec<usize>> = HashMap::new();
+        pending_at.insert(spec_bb, (0..tbs.len()).collect());
+
+        for &pblk in &region {
+            let Some(pending) = pending_at.get(&pblk).cloned() else {
+                // not reachable from spec_bb inside region (can happen for
+                // region entry = spec_bb only); skip
+                continue;
+            };
+            for s in cu.succs(pblk) {
+                // classify the edge
+                let is_backedge = dom.dominates(s, pblk);
+                let leaves_loop = match own_loop {
+                    Some(li) => !loops.loops[li].contains(s),
+                    None => false,
+                };
+                let is_final = is_backedge || leaves_loop || cu.succs(pblk).is_empty();
+                let mut out = pending.clone();
+
+                if is_final || !in_region[s.index()] {
+                    // iteration over: poison everything still pending
+                    for &ti in &out {
+                        emit(
+                            &mut plan,
+                            &mut needs_flag,
+                            &mut seq,
+                            cu,
+                            dom,
+                            reach,
+                            spec_bb,
+                            &tbs[ti],
+                            pblk,
+                            s,
+                            /*final_edge=*/ true,
+                        );
+                    }
+                    continue;
+                }
+
+                // normal scan
+                while let Some(&front) = out.first() {
+                    let (tb, _) = &tbs[front];
+                    if *tb == s {
+                        out.remove(0); // used at s; stop (paper line 13)
+                        break;
+                    } else if !reach.reachable(s, *tb) {
+                        emit(
+                            &mut plan,
+                            &mut needs_flag,
+                            &mut seq,
+                            cu,
+                            dom,
+                            reach,
+                            spec_bb,
+                            &tbs[front],
+                            pblk,
+                            s,
+                            false,
+                        );
+                        out.remove(0);
+                    } else {
+                        break; // earlier request still usable: wait
+                    }
+                }
+
+                // join coherence: the Lemma 6.1 invariant
+                match pending_at.get(&s) {
+                    Some(prev) => {
+                        if prev != &out {
+                            bail!(
+                                "pending-list mismatch at {} from {}: {:?} vs {:?} \
+                                 (speculative order cannot be matched — Lemma 6.1 violated)",
+                                s, pblk, prev, out
+                            );
+                        }
+                    }
+                    None => {
+                        pending_at.insert(s, out);
+                    }
+                }
+            }
+        }
+    }
+
+    // dedupe: a given request is poisoned at most once per placement
+    let mut seen: HashMap<(u32, Place), usize> = HashMap::new();
+    let mut deduped: Vec<PlannedPoison> = Vec::new();
+    for pp in plan {
+        let key = (pp.mem, pp.place.clone());
+        if seen.contains_key(&key) {
+            continue;
+        }
+        seen.insert(key, pp.seq);
+        deduped.push(pp);
+    }
+    needs_flag.sort();
+    needs_flag.dedup();
+    Ok((deduped, needs_flag))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    plan: &mut Vec<PlannedPoison>,
+    needs_flag: &mut Vec<BlockId>,
+    seq: &mut usize,
+    _cu: &Function,
+    dom: &DomTree,
+    reach: &Reachability,
+    spec_bb: BlockId,
+    (tb, reqs): &(BlockId, Vec<&SpecReq>),
+    from: BlockId,
+    to: BlockId,
+    final_edge: bool,
+) {
+    for r in reqs {
+        // Algorithm 3 case analysis:
+        // case 1: trueBB can still reach the destination → prologue would
+        //   fire on paths where the store is real ⇒ edge block.
+        // case 2: specBB does not dominate the destination ⇒ edge block
+        //   (+ steering guard when the edge source itself is not
+        //   dominated).
+        // case 3: otherwise prepend to the destination block.
+        let conflict = !final_edge && reach.reachable(*tb, to);
+        let place = if conflict || !dom.dominates(spec_bb, to) || final_edge {
+            Place::OnEdge { from, to }
+        } else {
+            Place::Prologue { block: to }
+        };
+        let guard_needed = match place {
+            Place::OnEdge { from, .. } => !dom.dominates(spec_bb, from),
+            Place::Prologue { .. } => false, // case 3 requires dominance
+        };
+        let guard = if guard_needed {
+            if !needs_flag.contains(&spec_bb) {
+                needs_flag.push(spec_bb);
+            }
+            Some(spec_bb)
+        } else {
+            None
+        };
+        plan.push(PlannedPoison { mem: r.mem, arr: r.arr, place: place.clone(), guard, seq: *seq });
+        *seq += 1;
+    }
+}
+
+/// Build the per-block steering flag ("did this iteration pass through
+/// `spec_bb`?") as an SSA φ network over `spec_bb`'s innermost loop (or
+/// the whole function when it is not in a loop). Returns the flag value
+/// valid at the *end* of each block.
+fn build_flag_network(
+    f: &mut Function,
+    spec_bb: BlockId,
+    loops: &LoopInfo,
+) -> Vec<Option<ValueId>> {
+    let scope: Vec<BlockId> = match loops.innermost(spec_bb) {
+        Some(l) => l.blocks.clone(),
+        None => (0..f.num_blocks() as u32).map(BlockId).collect(),
+    };
+    let header = loops.innermost(spec_bb).map(|l| l.header).unwrap_or(f.entry);
+    let in_scope = {
+        let mut v = vec![false; f.num_blocks()];
+        for &b in &scope {
+            v[b.index()] = true;
+        }
+        v
+    };
+    let preds = f.preds();
+
+    // RPO over scope from header.
+    let dom = DomTree::new(f);
+    let order = crate::analysis::rpo::reverse_post_order_from(f, header, &|a, b| {
+        dom.dominates(b, a) || !in_scope[b.index()]
+    });
+
+    let mut flag: Vec<Option<ValueId>> = vec![None; f.num_blocks()];
+
+    // const false in header (after φs), const true in spec_bb.
+    let insert_after_phis = |f: &mut Function, bb: BlockId, op: Op| -> ValueId {
+        let iid = f.create_instr(op);
+        let res = f.instr(iid).result.unwrap();
+        let insts = &mut f.blocks[bb.index()].instrs;
+        let mut pos = 0;
+        while pos < insts.len() && matches!(f.instrs[insts[pos].index()].op, Op::Phi { .. }) {
+            pos += 1;
+        }
+        insts.insert(pos, iid);
+        res
+    };
+
+    let false_v = insert_after_phis(f, header, Op::ConstB(false));
+    flag[header.index()] = Some(false_v);
+
+    // first pass: create φs where needed (multi-pred in-scope blocks)
+    let mut phi_of: HashMap<BlockId, ValueId> = HashMap::new();
+    for &b in &order {
+        if b == header {
+            continue;
+        }
+        let scope_preds: Vec<BlockId> = preds[b.index()]
+            .iter()
+            .copied()
+            .filter(|p| in_scope[p.index()])
+            .collect();
+        if b == spec_bb {
+            let t = insert_after_phis(f, b, Op::ConstB(true));
+            flag[b.index()] = Some(t);
+            continue;
+        }
+        if scope_preds.len() == 1 {
+            // inherit (filled in pass 2, pred processed earlier in RPO —
+            // except backedge preds, which cannot target non-headers in a
+            // reducible CFG)
+            flag[b.index()] = flag[scope_preds[0].index()];
+            if flag[b.index()].is_none() {
+                // pred not yet known (shouldn't happen in RPO) — create φ
+                let phi = insert_after_phis(
+                    f,
+                    b,
+                    Op::Phi { ty: Type::B1, incomings: vec![] },
+                );
+                phi_of.insert(b, phi);
+                flag[b.index()] = Some(phi);
+            }
+        } else {
+            let phi = insert_after_phis(f, b, Op::Phi { ty: Type::B1, incomings: vec![] });
+            phi_of.insert(b, phi);
+            flag[b.index()] = Some(phi);
+        }
+    }
+
+    // second pass: fill φ incomings (all preds now have flags; inner-loop
+    // headers take their backedge value from themselves via the latch
+    // flag, which equals the header flag since spec_bb is outside inner
+    // loops).
+    for (b, phi) in phi_of {
+        let incomings: Vec<(BlockId, ValueId)> = preds[b.index()]
+            .iter()
+            .filter(|p| in_scope[p.index()])
+            .map(|&p| (p, flag[p.index()].expect("pred flag known")))
+            .collect();
+        if let crate::ir::ValueDef::Instr(iid) = f.value(phi).def {
+            if let Op::Phi { incomings: inc, .. } = &mut f.instr_mut(iid).op {
+                *inc = incomings;
+            }
+        }
+    }
+
+    flag
+}
+
+/// Test hook: run the edge-local planner and return `(edge_to, mem)`
+/// placements in a naive-comparable form (prologue placements report the
+/// destination block; edge placements report the edge destination).
+pub fn plan_placements_for_tests(
+    cu: &Function,
+    map: &SpecReqMap,
+) -> Result<std::collections::BTreeSet<(u32, u32)>> {
+    let dom = DomTree::new(cu);
+    let loops = LoopInfo::new(cu, &dom);
+    let reach = Reachability::new(cu, &dom);
+    let (plan, _) = compute_plan(cu, map, &dom, &loops, &reach)?;
+    Ok(plan
+        .into_iter()
+        .map(|pp| {
+            let dst = match pp.place {
+                Place::Prologue { block } => block.0,
+                Place::OnEdge { to, .. } => to.0,
+            };
+            (dst, pp.mem)
+        })
+        .collect())
+}
+
+/// Paper-literal Algorithm 2 (all-paths enumeration) returning the set of
+/// `(edge, mem)` poisons. Exponential; used only by tests to cross-check
+/// [`compute_plan`]. Panics if the region has more than `max_paths`
+/// paths.
+pub fn poison_plan_naive(
+    cu: &Function,
+    map: &SpecReqMap,
+    max_paths: usize,
+) -> Result<std::collections::BTreeSet<(u32, u32, u32)>> {
+    let dom = DomTree::new(cu);
+    let loops = LoopInfo::new(cu, &dom);
+    let reach = Reachability::new(cu, &dom);
+    let mut out: std::collections::BTreeSet<(u32, u32, u32)> = Default::default();
+
+    for (spec_bb, reqs) in map {
+        let spec_bb = *spec_bb;
+        let mut tbs: Vec<(BlockId, Vec<&SpecReq>)> = Vec::new();
+        for r in reqs {
+            if !r.is_store {
+                continue;
+            }
+            match tbs.last_mut() {
+                Some((bb, list)) if *bb == r.true_bb => list.push(r),
+                _ => tbs.push((r.true_bb, vec![r])),
+            }
+        }
+        if tbs.is_empty() {
+            continue;
+        }
+        let own_loop = loops.innermost_idx(spec_bb);
+
+        // DFS over all paths.
+        let mut stack: Vec<(BlockId, Vec<usize>)> = vec![(spec_bb, (0..tbs.len()).collect())];
+        let mut paths = 0usize;
+        while let Some((b, pending)) = stack.pop() {
+            let succs = cu.succs(b);
+            if succs.is_empty() {
+                paths += 1;
+                if paths > max_paths {
+                    bail!("too many paths");
+                }
+                continue;
+            }
+            for s in succs {
+                let is_backedge = dom.dominates(s, b);
+                let leaves = match own_loop {
+                    Some(li) => !loops.loops[li].contains(s),
+                    None => false,
+                };
+                let mut p2 = pending.clone();
+                if is_backedge || leaves {
+                    for &ti in &p2 {
+                        for r in &tbs[ti].1 {
+                            out.insert((b.0, s.0, r.mem));
+                        }
+                    }
+                    paths += 1;
+                    if paths > max_paths {
+                        bail!("too many paths");
+                    }
+                    continue;
+                }
+                while let Some(&front) = p2.first() {
+                    if tbs[front].0 == s {
+                        p2.remove(0);
+                        break;
+                    } else if !reach.reachable(s, tbs[front].0) {
+                        for r in &tbs[front].1 {
+                            out.insert((b.0, s.0, r.mem));
+                        }
+                        p2.remove(0);
+                    } else {
+                        break;
+                    }
+                }
+                stack.push((s, p2));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::LodAnalysis;
+    use crate::ir::parser::parse_single;
+    use crate::transform::decouple::decouple;
+    use crate::transform::hoist::hoist_speculative_requests;
+
+    fn spec_compile(src: &str) -> (DaeProgram, SpecReqMap, PoisonStats) {
+        let (m, f) = parse_single(src).unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        let dom = DomTree::new(&f);
+        let loops = LoopInfo::new(&f, &dom);
+        let reach = Reachability::new(&f, &dom);
+        let mut p = decouple(&m, &f, false);
+        let hr = hoist_speculative_requests(&mut p, &lod, &dom, &loops, &reach);
+        assert!(hr.refused.is_empty(), "{:?}", hr.refused);
+        let stats = place_poisons(&mut p, &hr.map).unwrap();
+        (p, hr.map, stats)
+    }
+
+    #[test]
+    fn fig1c_single_poison() {
+        // Figure 1c: one guarded store → one poison call on the skip path.
+        let (p, map, stats) = spec_compile(
+            r#"
+array @A : i64[100]
+array @idx : i64[100]
+
+func @fig1c(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %fv = add.i %aw, %c1
+  store @A[%w], %fv
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#,
+        );
+        assert_eq!(map.len(), 1);
+        // store + the A[w] load + idx load are hoisted (all in `then`,
+        // region of `body`)
+        assert_eq!(stats.poison_calls, 1, "one poison for the skip path");
+        // poison lands in `latch` (case 3: body dominates latch, store
+        // can't reach latch... A store's trueBB `then` → edge body→latch:
+        // reach(then, latch) = true (then→latch) ⇒ case 1 edge block OR
+        // prologue — either way exactly one call.
+        crate::ir::verify::verify_module(&p.module).unwrap();
+    }
+
+    #[test]
+    fn fig3_order_and_placement() {
+        let (p, map, stats) = spec_compile(crate::transform::hoist::tests::FIG3);
+        // three stores speculated at `body`
+        assert_eq!(map.len(), 1);
+        assert_eq!(map[0].1.len(), 3);
+        // every path poisons exactly the stores it does not execute:
+        // 2 poisons per path × 3 paths, deduped across placements
+        assert!(stats.poison_calls >= 2, "calls={}", stats.poison_calls);
+        crate::ir::verify::verify_module(&p.module).unwrap();
+    }
+
+    #[test]
+    fn naive_and_fast_agree_on_fig3() {
+        let (m, f) = parse_single(crate::transform::hoist::tests::FIG3).unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        let dom = DomTree::new(&f);
+        let loops = LoopInfo::new(&f, &dom);
+        let reach = Reachability::new(&f, &dom);
+        let mut p = decouple(&m, &f, false);
+        let hr = hoist_speculative_requests(&mut p, &lod, &dom, &loops, &reach);
+
+        // compute fast plan placements as (edge, mem) via the naive-
+        // comparable subset: rerun compute_plan on the pristine CU.
+        let cu = &p.module.funcs[p.cu];
+        let domc = DomTree::new(cu);
+        let loopsc = LoopInfo::new(cu, &domc);
+        let reachc = Reachability::new(cu, &domc);
+        let (plan, _) = compute_plan(cu, &hr.map, &domc, &loopsc, &reachc).unwrap();
+        let naive = poison_plan_naive(cu, &hr.map, 10_000).unwrap();
+
+        // naive yields (from,to,mem); fast yields Prologue/OnEdge — map
+        // fast placements to edges for comparison: Prologue{b} matches any
+        // naive edge (*, b, mem); OnEdge matches exactly.
+        for (from, to, mem) in &naive {
+            let hit = plan.iter().any(|pp| {
+                pp.mem == *mem
+                    && match &pp.place {
+                        Place::OnEdge { from: f2, to: t2 } => {
+                            f2.0 == *from && t2.0 == *to
+                        }
+                        Place::Prologue { block } => block.0 == *to,
+                    }
+            });
+            assert!(hit, "naive poison ({from},{to},m{mem}) missing from fast plan");
+        }
+        // and the fast plan has no extra mems per edge-dst beyond naive
+        for pp in &plan {
+            let dst = match &pp.place {
+                Place::OnEdge { to, .. } => to.0,
+                Place::Prologue { block } => block.0,
+            };
+            assert!(
+                naive.iter().any(|(_, t, m2)| *t == dst && *m2 == pp.mem),
+                "fast plan has extra poison {:?}",
+                pp
+            );
+        }
+    }
+}

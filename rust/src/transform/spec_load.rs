@@ -1,0 +1,116 @@
+//! §5.4 — speculative load consumption.
+//!
+//! When Algorithm 1 hoists a `send_ld_addr` in the AGU, the matching
+//! `consume_val` in the CU must move to the corresponding block so the
+//! per-op value stream stays balanced (one consume per send on every
+//! path). The hoist pass only speculates loads with a *single, dominating*
+//! spec source, so re-homing the consume preserves SSA dominance for all
+//! existing uses; on mis-speculated paths the value is simply unused
+//! (§5.4: "the CU can either use the load value or discard it").
+
+use super::decouple::DaeProgram;
+use super::hoist::SpecReqMap;
+use crate::ir::Op;
+
+/// Move CU consumes of speculated loads to their spec blocks. Returns the
+/// number of consumes moved.
+pub fn hoist_spec_load_consumes(p: &mut DaeProgram, map: &SpecReqMap) -> usize {
+    let cu_idx = p.cu;
+    let cu = &mut p.module.funcs[cu_idx];
+    let mut moved = 0;
+
+    for (spec_bb, reqs) in map {
+        for r in reqs {
+            if r.is_store {
+                continue;
+            }
+            // find the CU consume with this mem tag
+            let mut found = None;
+            'outer: for (bi, b) in cu.blocks.iter().enumerate() {
+                for (pos, &iid) in b.instrs.iter().enumerate() {
+                    if let Op::ConsumeVal { mem, .. } = cu.instr(iid).op {
+                        if mem == r.mem {
+                            found = Some((bi, pos, iid));
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            let Some((bi, pos, iid)) = found else {
+                continue; // already DCE'd (value unused in CU) — nothing to balance
+            };
+            if bi == spec_bb.index() {
+                continue; // already there
+            }
+            cu.blocks[bi].instrs.remove(pos);
+            cu.blocks[spec_bb.index()].instrs.push(iid);
+            moved += 1;
+        }
+    }
+    moved
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::{DomTree, LodAnalysis, LoopInfo, Reachability};
+    use crate::ir::parser::parse_single;
+    use crate::ir::Op;
+    use crate::transform::decouple::decouple;
+    use crate::transform::hoist::hoist_speculative_requests;
+
+    #[test]
+    fn consume_moves_with_send() {
+        // guarded load whose value feeds compute (kept in CU) — the CU
+        // consume must follow the hoisted send to `body`.
+        let (m, f) = parse_single(
+            r#"
+array @A : i64[100]
+array @B : i64[100]
+
+func @specload(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %p = icmp.gt %a, %c0
+  condbr %p, then, latch
+then:
+  %b = load @B[%i]
+  %s = add.i %a, %b
+  store @A[%i], %s
+  br latch
+latch:
+  %c1 = const.i 1
+  %inext = add.i %i, %c1
+  br header
+exit:
+  ret
+}
+"#,
+        )
+        .unwrap();
+        let lod = LodAnalysis::new(&m, &f);
+        let dom = DomTree::new(&f);
+        let loops = LoopInfo::new(&f, &dom);
+        let reach = Reachability::new(&f, &dom);
+        let mut p = decouple(&m, &f, false);
+        let hr = hoist_speculative_requests(&mut p, &lod, &dom, &loops, &reach);
+        assert!(hr.refused.is_empty(), "{:?}", hr.refused);
+        let moved = super::hoist_spec_load_consumes(&mut p, &hr.map);
+        assert!(moved >= 1, "B-load consume should move to body");
+        // the consume of B now lives in `body`
+        let cu = p.cu_fn();
+        let body = &cu.blocks[2];
+        let has_b_consume = body.instrs.iter().any(|&iid| {
+            matches!(cu.instr(iid).op, Op::ConsumeVal { mem, .. }
+                if p.mem_ops[mem as usize].arr.0 == 1)
+        });
+        assert!(has_b_consume);
+        crate::ir::verify::verify_module(&p.module).unwrap();
+    }
+}

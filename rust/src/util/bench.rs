@@ -1,0 +1,71 @@
+//! Tiny bench harness (criterion is unavailable offline): warmup +
+//! timed samples with mean / stddev / min, criterion-like output.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 10 }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn fmt_time(ns: f64) -> String {
+        if ns < 1_000.0 {
+            format!("{ns:.1} ns")
+        } else if ns < 1_000_000.0 {
+            format!("{:.2} µs", ns / 1_000.0)
+        } else if ns < 1_000_000_000.0 {
+            format!("{:.2} ms", ns / 1_000_000.0)
+        } else {
+            format!("{:.3} s", ns / 1_000_000_000.0)
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup, samples }
+    }
+
+    /// Run `f` and report timing; the closure's return value is consumed
+    /// with `std::hint::black_box` to defeat dead-code elimination.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var =
+            times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+        let stats = BenchStats {
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            min_ns: times.iter().copied().fold(f64::INFINITY, f64::min),
+        };
+        println!(
+            "{name:<44} time: [{} ± {}]  (min {})",
+            BenchStats::fmt_time(stats.mean_ns),
+            BenchStats::fmt_time(stats.stddev_ns),
+            BenchStats::fmt_time(stats.min_ns),
+        );
+        stats
+    }
+}

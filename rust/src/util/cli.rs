@@ -1,0 +1,74 @@
+//! Minimal argument parser (`--key value`, `--flag`, positionals) — the
+//! vendor set has no clap.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name). `known_flags` lists
+    /// boolean options that take no value.
+    pub fn parse(argv: &[String], known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        let argv: Vec<String> =
+            ["run", "--seed", "7", "--trace", "--misspec=0.4", "hist"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = Args::parse(&argv, &["trace"]);
+        assert_eq!(a.positional, vec!["run", "hist"]);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.has_flag("trace"));
+        assert_eq!(a.get_f64("misspec", 0.0), 0.4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utilities. The offline vendor set has no
+//! clap/criterion/proptest/rand, so the CLI parser, bench harness,
+//! property-test driver and PRNG live here.
+
+pub mod bench;
+pub mod fxhash;
+pub mod cli;
+pub mod prng;
+
+pub use bench::Bench;
+pub use fxhash::FxHashMap;
+pub use cli::Args;
+pub use prng::Rng;

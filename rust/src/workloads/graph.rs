@@ -1,0 +1,126 @@
+//! Synthetic graph generator standing in for the paper's
+//! `email-Eu-core` (1005 nodes, 25 571 directed edges) — no network
+//! access in this environment, see DESIGN.md §2. The generator preserves
+//! what drives the paper's measurements: node/edge counts and a skewed
+//! (power-law-ish) degree distribution that yields irregular,
+//! data-dependent access patterns and realistic mis-speculation rates.
+
+use crate::util::Rng;
+
+pub const EMAIL_EU_NODES: usize = 1005;
+pub const EMAIL_EU_EDGES: usize = 25_571;
+
+/// Compressed sparse row digraph.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    pub m: usize,
+    pub rowp: Vec<i64>,
+    pub col: Vec<i64>,
+}
+
+impl Csr {
+    pub fn out_degree(&self, u: usize) -> usize {
+        (self.rowp[u + 1] - self.rowp[u]) as usize
+    }
+}
+
+/// Power-law-ish random digraph with exactly `n` nodes and `m` edges.
+pub fn synthetic(n: usize, m: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(m);
+    // skewed endpoints; self-loops redrawn
+    while edges.len() < m {
+        let u = rng.zipf(n as u64, 4.0) as u32;
+        let v = rng.below(n as u64) as u32;
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    // ensure connectivity-ish: a spanning ring of light edges replaces the
+    // first n entries' sources so BFS from node 0 reaches most nodes
+    for (i, e) in edges.iter_mut().take(n - 1).enumerate() {
+        *e = (i as u32, (i + 1) as u32);
+    }
+    rng.shuffle(&mut edges);
+
+    let mut deg = vec![0i64; n];
+    for &(u, _) in &edges {
+        deg[u as usize] += 1;
+    }
+    let mut rowp = vec![0i64; n + 1];
+    for i in 0..n {
+        rowp[i + 1] = rowp[i] + deg[i];
+    }
+    let mut cursor = rowp.clone();
+    let mut col = vec![0i64; m];
+    for &(u, v) in &edges {
+        col[cursor[u as usize] as usize] = v as i64;
+        cursor[u as usize] += 1;
+    }
+    Csr { n, m, rowp, col }
+}
+
+/// The default stand-in for email-Eu-core.
+pub fn email_eu_core_like(seed: u64) -> Csr {
+    synthetic(EMAIL_EU_NODES, EMAIL_EU_EDGES, seed)
+}
+
+/// Flat edge list (u, v, w) with weights in `[1, max_w]`.
+pub fn edge_list(g: &Csr, seed: u64, max_w: i64) -> (Vec<i64>, Vec<i64>, Vec<i64>) {
+    let mut rng = Rng::new(seed ^ 0xE16E);
+    let (mut eu, mut ev, mut ew) = (Vec::new(), Vec::new(), Vec::new());
+    for u in 0..g.n {
+        for e in g.rowp[u]..g.rowp[u + 1] {
+            eu.push(u as i64);
+            ev.push(g.col[e as usize]);
+            ew.push(rng.range_i64(1, max_w + 1));
+        }
+    }
+    (eu, ev, ew)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_edge_counts_match_email_eu_core() {
+        let g = email_eu_core_like(1);
+        assert_eq!(g.n, EMAIL_EU_NODES);
+        assert_eq!(g.m, EMAIL_EU_EDGES);
+        assert_eq!(*g.rowp.last().unwrap() as usize, g.m);
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        let g = email_eu_core_like(2);
+        let mut degs: Vec<usize> = (0..g.n).map(|u| g.out_degree(u)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = degs.iter().take(10).sum();
+        assert!(
+            top10 * 10 > g.m,
+            "top-10 nodes should carry >10% of edges, got {top10}/{}",
+            g.m
+        );
+    }
+
+    #[test]
+    fn bfs_reaches_most_nodes() {
+        let g = email_eu_core_like(3);
+        let mut seen = vec![false; g.n];
+        let mut q = vec![0usize];
+        seen[0] = true;
+        while let Some(u) = q.pop() {
+            for e in g.rowp[u]..g.rowp[u + 1] {
+                let v = g.col[e as usize] as usize;
+                if !seen[v] {
+                    seen[v] = true;
+                    q.push(v);
+                }
+            }
+        }
+        let cnt = seen.iter().filter(|&&x| x).count();
+        assert!(cnt > g.n * 9 / 10, "reached {cnt}/{}", g.n);
+    }
+}

@@ -1,0 +1,74 @@
+//! The paper's nine evaluation kernels (§8.1.2), the synthetic
+//! email-Eu-core stand-in, and the Fig. 7 nested-if template.
+//!
+//! Each kernel is defined in the textual IR with the same loop/branch/
+//! memory structure as the benchmark-suite C code the paper compiled
+//! (reproduced in comments in `kernels.rs`), a seeded data generator
+//! (with a mis-speculation-rate knob where Table 2 sweeps one), and an
+//! independent plain-Rust reference implementation used to validate that
+//! the IR encodes the intended algorithm.
+
+pub mod graph;
+pub mod kernels;
+pub mod nested;
+
+use crate::ir::types::Val;
+use crate::ir::Module;
+use crate::sim::Memory;
+use anyhow::{bail, Result};
+
+/// A runnable benchmark instance.
+pub struct Workload {
+    pub name: String,
+    /// Module with the kernel as `funcs[0]`.
+    pub module: Module,
+    pub args: Vec<Val>,
+    pub memory: Memory,
+    /// The mis-speculation rate the generator aimed for (None = emergent
+    /// from the data).
+    pub target_misspec: Option<f64>,
+}
+
+/// Paper §8.1.2 kernel names, in Table 1 order.
+pub const PAPER_KERNELS: [&str; 9] =
+    ["bfs", "bc", "sssp", "hist", "thr", "mm", "fw", "sort", "spmv"];
+
+/// Build a kernel by name with paper-default parameters.
+/// `misspec` overrides the data generator's mis-speculation knob where
+/// supported (hist, thr, mm, spmv — Table 2 sweeps the first three).
+pub fn build(name: &str, seed: u64, misspec: Option<f64>) -> Result<Workload> {
+    Ok(match name {
+        "hist" => kernels::hist(seed, misspec.unwrap_or(0.02)),
+        "thr" => kernels::thr(seed, misspec.unwrap_or(0.97)),
+        "mm" => kernels::mm(seed, misspec.unwrap_or(0.31)),
+        "fw" => kernels::fw(seed),
+        "sort" => kernels::sort(seed),
+        "spmv" => kernels::spmv(seed, misspec.unwrap_or(0.32)),
+        "bfs" => kernels::bfs(seed),
+        "sssp" => kernels::sssp(seed),
+        "bc" => kernels::bc(seed),
+        _ => bail!("unknown kernel {name} (expected one of {PAPER_KERNELS:?})"),
+    })
+}
+
+/// All nine kernels with paper-default parameters.
+pub fn paper_suite(seed: u64) -> Vec<Workload> {
+    PAPER_KERNELS.iter().map(|n| build(n, seed, None).unwrap()).collect()
+}
+
+/// Independent Rust reference for a kernel; returns the expected final
+/// memory. Panics on unknown kernels.
+pub fn rust_reference(w: &Workload) -> Memory {
+    kernels::rust_reference(&w.name, &w.memory, &w.args)
+}
+
+/// Helpers shared by the kernel builders.
+pub(crate) fn ints(mem: &Memory, arr: usize) -> Vec<i64> {
+    mem[arr].iter().map(|v| v.as_i()).collect()
+}
+
+pub(crate) fn set_ints(mem: &mut Memory, arr: usize, xs: &[i64]) {
+    for (i, &x) in xs.iter().enumerate() {
+        mem[arr][i] = Val::I(x);
+    }
+}

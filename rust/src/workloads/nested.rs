@@ -1,0 +1,127 @@
+//! The Fig. 7 synthetic template: `n` nested if-levels, one store per
+//! level, all guarded by a loaded value — SPEC inserts one poison block
+//! per level and n(n+1)/2 poison calls (§8.3.1).
+//!
+//! ```text
+//! for (i) { x = A[i];
+//!   if (x > 0) { A[i] = x+1;
+//!     if (x > 1) { A[i] = x+2;
+//!       if (x > 2) { ... } } } }
+//! ```
+//!
+//! The stores target the guarded array itself so every level carries the
+//! paper's LoD control dependency.
+
+use super::{set_ints, Workload};
+use crate::ir::parser::parse_module;
+use crate::ir::types::Val;
+use crate::sim::zero_memory;
+use crate::util::Rng;
+use std::fmt::Write;
+
+pub const NESTED_N: usize = 512;
+
+/// Build the template with `levels` nested ifs (1..=8 in Fig. 7).
+/// `depth_dist` controls the data: element values are uniform over
+/// `[0, levels+1)`, so level k's store executes with probability
+/// `(levels+1-k)/(levels+1)`.
+pub fn nested(levels: usize, seed: u64) -> Workload {
+    assert!((1..=16).contains(&levels));
+    let mut src = String::new();
+    let _ = writeln!(src, "array @A : i64[{NESTED_N}]");
+    let _ = writeln!(src, "\nfunc @nested{levels}(%n: i64) {{");
+    let _ = writeln!(src, "entry:\n  %c0 = const.i 0\n  br header");
+    let _ = writeln!(
+        src,
+        "header:\n  %i = phi i64 [entry: %c0], [latch: %inext]\n  %cc = icmp.lt %i, %n\n  condbr %cc, body, exit"
+    );
+    let _ = writeln!(src, "body:\n  %x = load @A[%i]");
+    // level 1 guard lives in body
+    let _ = writeln!(src, "  %t0 = const.i 0\n  %p1 = icmp.gt %x, %t0\n  condbr %p1, lvl1, latch");
+    for k in 1..=levels {
+        let _ = writeln!(src, "lvl{k}:");
+        let _ = writeln!(src, "  %v{k} = const.i {k}");
+        let _ = writeln!(src, "  %s{k} = add.i %x, %v{k}");
+        let _ = writeln!(src, "  store @A[%i], %s{k}");
+        if k < levels {
+            let _ = writeln!(src, "  %p{} = icmp.gt %x, %v{k}", k + 1);
+            let _ = writeln!(src, "  condbr %p{}, lvl{}, latch", k + 1, k + 1);
+        } else {
+            let _ = writeln!(src, "  br latch");
+        }
+    }
+    let _ = writeln!(
+        src,
+        "latch:\n  %c1 = const.i 1\n  %inext = add.i %i, %c1\n  br header"
+    );
+    let _ = writeln!(src, "exit:\n  ret\n}}");
+
+    let module = parse_module(&src).unwrap_or_else(|e| panic!("nested{levels}: {e}"));
+    let mut memory = zero_memory(&module);
+    let mut rng = Rng::new(seed);
+    let a: Vec<i64> = (0..NESTED_N).map(|_| rng.range_i64(0, levels as i64 + 1)).collect();
+    set_ints(&mut memory, 0, &a);
+    Workload {
+        name: format!("nested{levels}"),
+        module,
+        args: vec![Val::I(NESTED_N as i64)],
+        memory,
+        target_misspec: None,
+    }
+}
+
+/// Rust reference for the template.
+pub fn nested_reference(levels: usize, w: &Workload) -> crate::sim::Memory {
+    let mut mem = w.memory.clone();
+    let mut a = super::ints(&mem, 0);
+    for i in 0..NESTED_N {
+        let x = a[i]; // guard value loaded once, before the stores
+        for k in 1..=levels as i64 {
+            if x > k - 1 {
+                a[i] = x + k;
+            } else {
+                break;
+            }
+        }
+    }
+    set_ints(&mut mem, 0, &a);
+    mem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{interpret, memory_diff};
+
+    #[test]
+    fn nested_matches_reference_for_all_depths() {
+        for levels in 1..=8 {
+            let w = nested(levels, 99);
+            let r = interpret(&w.module, &w.module.funcs[0], &w.args, w.memory.clone(), 10_000_000)
+                .unwrap();
+            let expect = nested_reference(levels, &w);
+            assert!(
+                memory_diff(&r.memory, &expect).is_none(),
+                "nested{levels} mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_build_counts_scale_with_depth() {
+        use crate::transform::{build, Arch, Compiled};
+        let mut prev_calls = 0;
+        for levels in 1..=4 {
+            let w = nested(levels, 5);
+            let c = build(&w.module, 0, Arch::Spec).unwrap();
+            let Compiled::Dae { stats, .. } = &c else { panic!() };
+            assert!(
+                stats.poison_calls >= prev_calls,
+                "poison calls should grow with nesting: {} then {}",
+                prev_calls,
+                stats.poison_calls
+            );
+            prev_calls = stats.poison_calls;
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Runtime integration: load the AOT artifacts (JAX/Pallas → HLO text),
+//! execute via PJRT from Rust, and check the vectorised-speculation
+//! engine against the scalar kernels. Requires `make artifacts`.
+
+use dae_spec::runtime::{artifacts_dir, PjrtRuntime, VectorSpecEngine};
+use dae_spec::workloads::kernels::{HIST_CAP, THR_T};
+
+fn need_artifacts() -> bool {
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn hist_step_artifact_matches_scalar() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load_artifact("hist_step").unwrap();
+    let h: Vec<i64> = (0..256).map(|i| if i % 5 == 0 { HIST_CAP } else { i }).collect();
+    let idx: Vec<i64> = (0..256).map(|i| (i * 7) % 256).collect();
+    let outs = exe.run_i64(&[&h, &idx]).unwrap();
+    assert_eq!(outs.len(), 2);
+    let (vals, mask) = (&outs[0], &outs[1]);
+    for l in 0..256 {
+        let g = h[idx[l] as usize];
+        assert_eq!(vals[l], g + 1, "lane {l}");
+        assert_eq!(mask[l], (g < HIST_CAP) as i64, "lane {l} mask");
+    }
+}
+
+#[test]
+fn vector_spec_hist_equals_scalar_reference() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut eng = VectorSpecEngine::new(&rt, "hist_step", 256).unwrap();
+
+    let mut rng = dae_spec::util::Rng::new(99);
+    let n = 2048;
+    let d: Vec<i64> = (0..n).map(|_| rng.below(256) as i64).collect();
+    let mut h_vec: Vec<i64> = (0..256).map(|b| if b < 8 { HIST_CAP } else { 0 }).collect();
+    let mut h_ref = h_vec.clone();
+
+    // scalar reference
+    for &v in &d {
+        if h_ref[v as usize] < HIST_CAP {
+            h_ref[v as usize] += 1;
+        }
+    }
+    eng.run_hist(&mut h_vec, &d, HIST_CAP).unwrap();
+    assert_eq!(h_vec, h_ref, "vector-speculated hist must match scalar");
+    assert!(eng.stats.batches == (n as u64).div_ceil(256));
+    assert!(eng.stats.conflict_lanes > 0, "duplicate bins must trigger replays");
+    assert!(eng.stats.masked_lanes > 0, "saturated bins must be masked (poisoned)");
+}
+
+#[test]
+fn vector_spec_thr_equals_scalar_reference() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut eng = VectorSpecEngine::new(&rt, "thr_step", 256).unwrap();
+    let mut rng = dae_spec::util::Rng::new(5);
+    let n = 1000;
+    let mut r: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 200)).collect();
+    let mut g: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 200)).collect();
+    let mut b: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 200)).collect();
+    let (r0, g0, b0) = (r.clone(), g.clone(), b.clone());
+
+    eng.run_thr(&mut r, &mut g, &mut b).unwrap();
+    for i in 0..n {
+        if r0[i] + g0[i] + b0[i] > THR_T {
+            assert_eq!((r[i], g[i], b[i]), (0, 0, 0), "pixel {i} should be zeroed");
+        } else {
+            assert_eq!((r[i], g[i], b[i]), (r0[i], g0[i], b0[i]), "pixel {i} untouched");
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! End-to-end integration: every paper kernel × every architecture
+//! compiles, simulates, and (except ORACLE) reproduces the reference
+//! memory; cycle shapes follow the paper (DAE ≫ STA > SPEC ≈ ORACLE on
+//! LoD-bound kernels).
+
+use dae_spec::sim::{machine::simulate, memory_diff, MachineConfig};
+use dae_spec::transform::{build, Arch, Compiled};
+use dae_spec::workloads::{self, rust_reference, PAPER_KERNELS};
+use std::collections::HashMap;
+
+#[test]
+fn all_kernels_all_archs_functional() {
+    let cfg = MachineConfig::default();
+    for name in PAPER_KERNELS {
+        let w = workloads::build(name, 2026, None).unwrap();
+        let expect = rust_reference(&w);
+        for arch in Arch::ALL {
+            let c = build(&w.module, 0, arch)
+                .unwrap_or_else(|e| panic!("{name}/{arch:?}: build: {e}"));
+            let sim = simulate(&c, &w.args, w.memory.clone(), &cfg)
+                .unwrap_or_else(|e| panic!("{name}/{arch:?}: sim: {e}"));
+            let ok = memory_diff(&sim.memory, &expect).is_none();
+            if arch != Arch::Oracle {
+                assert!(
+                    ok,
+                    "{name}/{arch:?}: memory diverges at {:?}",
+                    memory_diff(&sim.memory, &expect)
+                );
+            }
+            assert!(sim.cycles > 0, "{name}/{arch:?}: zero cycles");
+        }
+    }
+}
+
+#[test]
+fn spec_speculates_on_every_kernel() {
+    for name in PAPER_KERNELS {
+        let w = workloads::build(name, 7, None).unwrap();
+        let c = build(&w.module, 0, Arch::Spec).unwrap();
+        let Compiled::Dae { stats, map, .. } = &c else { panic!() };
+        let n_spec: usize = map.as_ref().map(|m| m.iter().map(|(_, r)| r.len()).sum()).unwrap_or(0);
+        assert!(n_spec > 0, "{name}: nothing speculated");
+        assert!(stats.poison_calls > 0, "{name}: no poison calls");
+    }
+}
+
+#[test]
+fn cycle_shapes_follow_paper() {
+    // Figure 6's qualitative claims on the sweep-style kernels:
+    //   SPEC < STA (speedup), DAE > STA (decoupling lost), SPEC ≈ ORACLE.
+    let cfg = MachineConfig::default();
+    let mut rows: Vec<(String, HashMap<Arch, u64>)> = Vec::new();
+    for name in ["hist", "thr", "mm", "fw", "sort", "spmv", "sssp"] {
+        let w = workloads::build(name, 2026, None).unwrap();
+        let mut cycles = HashMap::new();
+        for arch in Arch::ALL {
+            let c = build(&w.module, 0, arch).unwrap();
+            let sim = simulate(&c, &w.args, w.memory.clone(), &cfg).unwrap();
+            cycles.insert(arch, sim.cycles);
+        }
+        eprintln!(
+            "{name:>6}: STA={} DAE={} SPEC={} ORACLE={}",
+            cycles[&Arch::Sta], cycles[&Arch::Dae], cycles[&Arch::Spec], cycles[&Arch::Oracle]
+        );
+        rows.push((name.to_string(), cycles));
+    }
+    for (name, c) in &rows {
+        assert!(
+            c[&Arch::Spec] < c[&Arch::Sta],
+            "{name}: SPEC ({}) should beat STA ({})",
+            c[&Arch::Spec],
+            c[&Arch::Sta]
+        );
+        assert!(
+            c[&Arch::Dae] > c[&Arch::Sta],
+            "{name}: DAE ({}) should lose to STA ({}) — LoD sequentialises it",
+            c[&Arch::Dae],
+            c[&Arch::Sta]
+        );
+        // SPEC within 25% of ORACLE (paper: within 5% on its testbed)
+        let spec = c[&Arch::Spec] as f64;
+        let oracle = c[&Arch::Oracle] as f64;
+        assert!(
+            spec <= oracle * 1.25,
+            "{name}: SPEC {} too far from ORACLE {}",
+            spec,
+            oracle
+        );
+    }
+}
+
+#[test]
+fn misspec_rates_track_knobs() {
+    let cfg = MachineConfig::default();
+    for (name, rate) in [("hist", 0.4), ("thr", 0.6), ("mm", 0.31)] {
+        let w = workloads::build(name, 11, Some(rate)).unwrap();
+        let c = build(&w.module, 0, Arch::Spec).unwrap();
+        let sim = simulate(&c, &w.args, w.memory.clone(), &cfg).unwrap();
+        assert!(
+            (sim.misspec_rate - rate).abs() < 0.12,
+            "{name}: wanted misspec ≈ {rate}, measured {}",
+            sim.misspec_rate
+        );
+    }
+}
