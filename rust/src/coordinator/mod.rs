@@ -4,7 +4,7 @@
 pub mod report;
 pub mod runner;
 
-pub use runner::{run_kernel, ExperimentRow};
+pub use runner::{run_kernel, run_suite, ExperimentRow, SuiteFailure, SuiteOutcome};
 
 use crate::util::Args;
 
@@ -14,21 +14,36 @@ dae-spec — compiler support for speculation in DAE architectures (CC'25 reprod
 USAGE:
   dae-spec repro <table1|table2|fig2|fig6|fig7|all> [--seed N]
   dae-spec run --kernel <name> [--arch sta|dae|spec|oracle] [--seed N]
-               [--misspec R] [--trace]
+               [--misspec R] [--trace] [--watchdog N] [--timeout-ms MS]
+  dae-spec fuzz [--kernel hist] [--plans 25] [--seed N] [--arch sta,dae,spec]
+                [--watchdog N] [--timeout-ms MS] [--verbose]
+                differential fault-injection fuzzing: each plan perturbs
+                timing only (SRAM latency spikes, channel push/pop jitter,
+                LSQ load/store-queue squeezes, mis-speculation storms), so
+                final memory must stay bit-identical to the reference
+                interpreter; failing plans are minimized and printed with
+                their replay seed
   dae-spec compile --kernel <name> [--arch ...]      dump transformed IR
   dae-spec lsq-sweep [--kernel bfs] [--sizes 4,8,16,32,64]
   dae-spec list                                      list kernels
+
+Watchdog knobs (MachineConfig): --watchdog N aborts after N scheduler
+rounds with no timestamp/instruction advance (default 10000, 0 = off);
+--timeout-ms MS is a cooperative wall-clock budget per simulation
+(default 0 = off). Both produce a structured stall diagnostic listing
+per-unit t_ctrl, channel occupancy/last-push/last-pop, and LSQ fill.
 
 Kernels: bfs bc sssp hist thr mm fw sort spmv nested<1-8>
 ";
 
 /// CLI dispatcher (kept in the library so it is testable).
 pub fn cli_main(argv: Vec<String>) -> i32 {
-    let args = Args::parse(&argv, &["trace", "no-check"]);
+    let args = Args::parse(&argv, &["trace", "no-check", "verbose"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "repro" => cmd_repro(&args),
         "run" => cmd_run(&args),
+        "fuzz" => cmd_fuzz(&args),
         "compile" => cmd_compile(&args),
         "lsq-sweep" => cmd_lsq_sweep(&args),
         "list" => {
@@ -46,8 +61,55 @@ pub fn cli_main(argv: Vec<String>) -> i32 {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
+            report::print_stall(&e);
             1
         }
+    }
+}
+
+/// Apply the shared watchdog/timeout CLI knobs to a machine config.
+fn apply_watchdog_knobs(cfg: &mut crate::sim::MachineConfig, args: &Args) {
+    cfg.watchdog_rounds = args.get_u64("watchdog", cfg.watchdog_rounds);
+    cfg.wall_timeout_ms = args.get_u64("timeout-ms", cfg.wall_timeout_ms);
+}
+
+fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
+    let kernel = args.get("kernel").unwrap_or("hist");
+    let seed = args.get_u64("seed", 2026);
+    let plans = args.get_u64("plans", 25);
+    let archs = parse_archs(Some(args.get("arch").unwrap_or("sta,dae,spec")))?;
+    if archs.contains(&crate::transform::Arch::Oracle) {
+        anyhow::bail!("fuzz: ORACLE diverges from the reference by design; pick sta/dae/spec");
+    }
+    let mut cfg = crate::sim::MachineConfig::default();
+    apply_watchdog_knobs(&mut cfg, args);
+    let out = crate::fault::fuzz_kernel(
+        kernel,
+        seed,
+        plans,
+        &archs,
+        &cfg,
+        args.has_flag("verbose"),
+    )?;
+    let arch_names: Vec<&str> = out.archs.iter().map(|a| a.name()).collect();
+    if out.ok() {
+        println!(
+            "fuzz: {} plan(s) x [{}] on {} — no divergence from reference (seed {seed})",
+            out.plans,
+            arch_names.join(","),
+            out.kernel
+        );
+        Ok(())
+    } else {
+        for f in &out.failures {
+            eprintln!("{f}");
+        }
+        anyhow::bail!(
+            "fuzz: {}/{} plan x arch cell(s) diverged on {}",
+            out.failures.len(),
+            out.plans as usize * out.archs.len(),
+            out.kernel
+        )
     }
 }
 
@@ -77,8 +139,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 2026);
     let misspec = args.get("misspec").and_then(|s| s.parse().ok());
     let archs = parse_archs(args.get("arch"))?;
-    let mut cfg = crate::sim::MachineConfig::default();
-    cfg.trace = args.has_flag("trace");
+    let mut cfg = crate::sim::MachineConfig {
+        trace: args.has_flag("trace"),
+        ..Default::default()
+    };
+    apply_watchdog_knobs(&mut cfg, args);
     let row = runner::run_kernel(kernel, seed, misspec, &archs, &cfg, !args.has_flag("no-check"))?;
     report::print_row(&row);
     if cfg.trace {

@@ -3,11 +3,42 @@
 //! the paper reports (absolute numbers differ — our substrate is a
 //! simulator, see DESIGN.md — the *shapes* are the reproduction target).
 
-use super::runner::{run_kernel, run_suite, ExperimentRow};
-use crate::sim::MachineConfig;
+use super::runner::{run_kernel, run_suite, ExperimentRow, SuiteOutcome};
+use crate::sim::{MachineConfig, StallDiagnostic};
 use crate::transform::Arch;
 use crate::workloads::PAPER_KERNELS;
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// If `err`'s root cause is a [`StallDiagnostic`], print its full
+/// multi-line machine-state report (channel occupancies, LSQ fill,
+/// per-unit t_ctrl) to stderr. Returns whether one was found.
+pub fn print_stall(err: &anyhow::Error) -> bool {
+    match err.downcast_ref::<StallDiagnostic>() {
+        Some(diag) => {
+            eprint!("{}", diag.render());
+            true
+        }
+        None => false,
+    }
+}
+
+/// Report the failed kernel × arch cells of a partial suite run.
+pub fn print_suite_failures(out: &SuiteOutcome) {
+    for f in &out.failures {
+        eprintln!("suite: kernel {} failed: {:#}", f.kernel, f.error);
+        print_stall(&f.error);
+    }
+}
+
+/// Unwrap a suite outcome for reports that need every kernel: print
+/// what failed, bail only when nothing completed at all.
+fn suite_rows(out: SuiteOutcome) -> Result<Vec<ExperimentRow>> {
+    print_suite_failures(&out);
+    if out.rows.is_empty() {
+        bail!("suite produced no rows ({} kernel(s) failed)", out.failures.len());
+    }
+    Ok(out.rows)
+}
 
 pub fn print_row(row: &ExperimentRow) {
     println!(
@@ -31,7 +62,7 @@ fn harmonic_mean(xs: &[f64]) -> f64 {
 /// and area for STA / DAE / SPEC / ORACLE across the nine kernels.
 pub fn table1(seed: u64) -> Result<()> {
     let cfg = MachineConfig::default();
-    let rows = run_suite(&PAPER_KERNELS, seed, &Arch::ALL, &cfg)?;
+    let rows = suite_rows(run_suite(&PAPER_KERNELS, seed, &Arch::ALL, &cfg))?;
 
     println!("\n== Table 1: absolute performance and area (cf. paper Table 1) ==");
     println!(
@@ -91,7 +122,7 @@ pub fn table1(seed: u64) -> Result<()> {
 /// Fig. 6: speedup of DAE / SPEC / ORACLE normalised to STA.
 pub fn fig6(seed: u64) -> Result<()> {
     let cfg = MachineConfig::default();
-    let rows = run_suite(&PAPER_KERNELS, seed, &Arch::ALL, &cfg)?;
+    let rows = suite_rows(run_suite(&PAPER_KERNELS, seed, &Arch::ALL, &cfg))?;
     println!("\n== Figure 6: speedup over STA (higher is better; paper: SPEC avg 1.9x, up to 3x) ==");
     println!("{:<8}{:>8}{:>8}{:>8}", "kernel", "DAE", "SPEC", "ORACLE");
     let mut speedups: Vec<[f64; 3]> = Vec::new();
@@ -177,8 +208,7 @@ pub fn fig7(seed: u64) -> Result<()> {
 /// Fig. 2: pipeline timelines of decoupled (SPEC) vs non-decoupled (DAE)
 /// address generation on the running example.
 pub fn fig2(seed: u64) -> Result<()> {
-    let mut cfg = MachineConfig::default();
-    cfg.trace = true;
+    let cfg = MachineConfig { trace: true, ..Default::default() };
     println!("\n== Figure 2: decoupled vs non-decoupled address generation (hist kernel) ==");
     let row = run_kernel("hist", seed, None, &[Arch::Dae, Arch::Spec], &cfg, true)?;
     for (arch, tr) in &row.traces {
@@ -202,8 +232,7 @@ pub fn lsq_sweep(kernel: &str, seed: u64, sizes: &[usize]) -> Result<()> {
     println!("\n== LSQ store-queue sweep on {kernel} (cf. paper §8.2.1) ==");
     println!("{:<10}{:>12}{:>12}", "st_q", "SPEC cycles", "misspec");
     for &st_q in sizes {
-        let mut cfg = MachineConfig::default();
-        cfg.st_q = st_q;
+        let cfg = MachineConfig { st_q, ..Default::default() };
         let row = run_kernel(kernel, seed, None, &[Arch::Spec], &cfg, true)?;
         println!(
             "{:<10}{:>12}{:>11.0}%",

@@ -1,12 +1,18 @@
 //! Threaded experiment execution: one kernel × N architectures, with
 //! functional cross-checks against the reference interpreter.
+//!
+//! Panic-safe by construction: every worker thread body runs under
+//! `catch_unwind`, so a panic in one kernel × arch cell becomes a
+//! captured error naming the cell instead of aborting the whole suite
+//! (`run_suite` returns the completed rows plus per-kernel failures).
 
 use crate::area::{estimate, AreaEstimate};
 use crate::sim::machine::{simulate, SimResult};
 use crate::sim::{interpret, memory_diff, MachineConfig};
 use crate::transform::{build, Arch, Compiled};
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// One row of the paper's Table 1: a kernel across architectures.
 pub struct ExperimentRow {
@@ -20,6 +26,43 @@ pub struct ExperimentRow {
     pub traces: Vec<(Arch, crate::sim::Trace)>,
 }
 
+/// A kernel whose row could not be completed, with the error naming the
+/// kernel (and, for per-arch failures, the architecture).
+pub struct SuiteFailure {
+    pub kernel: String,
+    pub error: anyhow::Error,
+}
+
+/// Partial-tolerant suite result: completed rows in kernel order, plus
+/// the cells that failed (panic, stall, divergence) and why.
+pub struct SuiteOutcome {
+    pub rows: Vec<ExperimentRow>,
+    pub failures: Vec<SuiteFailure>,
+}
+
+/// Render a `catch_unwind` payload as a message.
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Test hook: lets the suite-resilience unit test inject a panic without
+/// a poisoned workload. Inert outside `cfg(test)`.
+#[cfg(test)]
+fn test_panic_hook(kernel: &str) {
+    if kernel == "__panic" {
+        panic!("injected test panic in kernel thread");
+    }
+}
+
+#[cfg(not(test))]
+fn test_panic_hook(_kernel: &str) {}
+
 /// Compile + simulate `kernel` on every architecture in `archs`.
 /// With `check`, assert the final memory matches the reference
 /// interpreter (except ORACLE, which is expected to diverge).
@@ -31,6 +74,7 @@ pub fn run_kernel(
     cfg: &MachineConfig,
     check: bool,
 ) -> Result<ExperimentRow> {
+    test_panic_hook(kernel);
     let w = super::build_workload(kernel, seed, misspec)?;
     let reference = if check {
         Some(
@@ -52,25 +96,41 @@ pub fn run_kernel(
         traces: Vec::new(),
     };
 
-    // architectures are independent — run them on scoped threads
+    // architectures are independent — run them on scoped threads; a
+    // panicking arch is captured and reported as that cell's error
     let results: Vec<(Arch, Result<(Compiled, SimResult)>)> = std::thread::scope(|s| {
         let handles: Vec<_> = archs
             .iter()
             .map(|&arch| {
                 let w = &w;
-                s.spawn(move || -> Result<(Compiled, SimResult)> {
-                    let c = build(&w.module, 0, arch)
-                        .with_context(|| format!("{kernel}/{}", arch.name()))?;
-                    let sim = simulate(&c, &w.args, w.memory.clone(), cfg)
-                        .with_context(|| format!("{kernel}/{}", arch.name()))?;
-                    Ok((c, sim))
+                s.spawn(move || {
+                    catch_unwind(AssertUnwindSafe(|| -> Result<(Compiled, SimResult)> {
+                        let c = build(&w.module, 0, arch)
+                            .with_context(|| format!("{kernel}/{}", arch.name()))?;
+                        let sim = simulate(&c, &w.args, w.memory.clone(), cfg)
+                            .with_context(|| format!("{kernel}/{}", arch.name()))?;
+                        Ok((c, sim))
+                    }))
                 })
             })
             .collect();
         archs
             .iter()
             .zip(handles)
-            .map(|(&a, h)| (a, h.join().expect("sim thread panicked")))
+            .map(|(&a, h)| {
+                // join() wraps the catch_unwind result: the outer Err is
+                // unreachable (the closure never unwinds past the catch)
+                // but folds into the same panic arm for safety.
+                let res = match h.join() {
+                    Ok(Ok(r)) => r,
+                    Ok(Err(payload)) | Err(payload) => Err(anyhow!(
+                        "{kernel}/{}: simulation thread panicked: {}",
+                        a.name(),
+                        panic_msg(payload.as_ref())
+                    )),
+                };
+                (a, res)
+            })
             .collect()
     });
 
@@ -103,20 +163,49 @@ pub fn run_kernel(
     Ok(row)
 }
 
-/// Run a set of kernels in parallel (one thread per kernel).
+/// Run a set of kernels in parallel (one thread per kernel). Never
+/// fails as a whole: kernels that error or panic are reported in
+/// `SuiteOutcome::failures` naming the kernel × arch cell, and the
+/// remaining rows are returned in kernel order.
 pub fn run_suite(
     kernels: &[&str],
     seed: u64,
     archs: &[Arch],
     cfg: &MachineConfig,
-) -> Result<Vec<ExperimentRow>> {
-    std::thread::scope(|s| {
+) -> SuiteOutcome {
+    let results: Vec<(String, Result<ExperimentRow>)> = std::thread::scope(|s| {
         let handles: Vec<_> = kernels
             .iter()
-            .map(|&k| s.spawn(move || run_kernel(k, seed, None, archs, cfg, true)))
+            .map(|&k| {
+                s.spawn(move || {
+                    catch_unwind(AssertUnwindSafe(|| run_kernel(k, seed, None, archs, cfg, true)))
+                })
+            })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("kernel thread panicked")).collect()
-    })
+        kernels
+            .iter()
+            .zip(handles)
+            .map(|(&k, h)| {
+                let res = match h.join() {
+                    Ok(Ok(row)) => row,
+                    Ok(Err(payload)) | Err(payload) => Err(anyhow!(
+                        "{k}: kernel thread panicked: {}",
+                        panic_msg(payload.as_ref())
+                    )),
+                };
+                (k.to_string(), res)
+            })
+            .collect()
+    });
+
+    let mut out = SuiteOutcome { rows: Vec::new(), failures: Vec::new() };
+    for (kernel, res) in results {
+        match res {
+            Ok(row) => out.rows.push(row),
+            Err(error) => out.failures.push(SuiteFailure { kernel, error }),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -135,7 +224,30 @@ mod tests {
     #[test]
     fn suite_runs_in_parallel() {
         let cfg = MachineConfig::default();
-        let rows = run_suite(&["hist", "thr"], 1, &[Arch::Sta, Arch::Spec], &cfg).unwrap();
-        assert_eq!(rows.len(), 2);
+        let out = run_suite(&["hist", "thr"], 1, &[Arch::Sta, Arch::Spec], &cfg);
+        assert_eq!(out.rows.len(), 2);
+        assert!(out.failures.is_empty());
+    }
+
+    #[test]
+    fn suite_partial_on_panic() {
+        let cfg = MachineConfig::default();
+        let out = run_suite(&["hist", "__panic", "thr"], 1, &[Arch::Sta, Arch::Spec], &cfg);
+        let kernels: Vec<&str> = out.rows.iter().map(|r| r.kernel.as_str()).collect();
+        assert_eq!(kernels, ["hist", "thr"], "good kernels still complete");
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].kernel, "__panic");
+        let msg = format!("{:#}", out.failures[0].error);
+        assert!(msg.contains("panicked"), "failure names the panic: {msg}");
+        assert!(msg.contains("__panic"), "failure names the kernel: {msg}");
+    }
+
+    #[test]
+    fn unknown_kernel_is_captured_not_fatal() {
+        let cfg = MachineConfig::default();
+        let out = run_suite(&["no_such_kernel"], 1, &[Arch::Sta], &cfg);
+        assert!(out.rows.is_empty());
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].kernel, "no_such_kernel");
     }
 }

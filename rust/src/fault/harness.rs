@@ -1,0 +1,169 @@
+//! Differential fuzz harness: run seeded fault plans across
+//! architectures and assert bit-exact memory equivalence against the
+//! reference interpreter.
+//!
+//! Timing-only plans (the only kind [`FaultPlan::generate`] emits) must
+//! never change committed memory — the functional co-simulation order is
+//! independent of timestamps by construction — so any divergence, stall,
+//! or Lemma 6.1 (store-stream order) violation under such a plan is a
+//! real machine bug. A failing plan is greedily minimized (drop events,
+//! then the mis-speculation override, while the failure still
+//! reproduces) and reported with the exact seed for replay.
+
+use super::{FaultInjector, FaultPlan};
+use crate::sim::{interpret, memory_diff, simulate, MachineConfig};
+use crate::transform::{build, Arch};
+use anyhow::{Context, Result};
+use std::fmt;
+
+/// One confirmed divergence: a plan × arch cell whose final memory (or
+/// termination behaviour) departed from the reference interpreter.
+#[derive(Debug)]
+pub struct FuzzFailure {
+    pub kernel: String,
+    pub plan_index: u64,
+    pub plan_seed: u64,
+    pub base_seed: u64,
+    pub arch: Arch,
+    pub desc: String,
+    /// Greedily shrunk plan that still reproduces the failure.
+    pub minimized: FaultPlan,
+}
+
+impl fmt::Display for FuzzFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "FAIL {}/{} plan #{} (seed=0x{:016x}): {}",
+            self.kernel,
+            self.arch.name(),
+            self.plan_index,
+            self.plan_seed,
+            self.desc
+        )?;
+        writeln!(f, "  minimized: {}", self.minimized)?;
+        write!(
+            f,
+            "  repro: dae-spec fuzz --kernel {} --seed {} --plans {} --arch {}",
+            self.kernel,
+            self.base_seed,
+            self.plan_index + 1,
+            self.arch.name()
+        )
+    }
+}
+
+/// Result of a fuzz batch.
+#[derive(Debug)]
+pub struct FuzzOutcome {
+    pub kernel: String,
+    pub plans: u64,
+    pub archs: Vec<Arch>,
+    pub failures: Vec<FuzzFailure>,
+}
+
+impl FuzzOutcome {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Run one plan on one architecture. `Ok(None)` means the machine
+/// terminated and matched the reference bit-for-bit; `Ok(Some(desc))`
+/// describes a divergence (wrong memory, stall, or internal invariant
+/// trip under the plan). `Err` is an infrastructure failure — the
+/// workload or reference itself could not be built/run.
+pub fn check_plan(
+    kernel: &str,
+    plan: &FaultPlan,
+    arch: Arch,
+    cfg: &MachineConfig,
+) -> Result<Option<String>> {
+    let w = crate::coordinator::build_workload(kernel, plan.seed, plan.misspec)?;
+    let reference = interpret(
+        &w.module,
+        &w.module.funcs[0],
+        &w.args,
+        w.memory.clone(),
+        cfg.max_dyn_instrs,
+    )
+    .with_context(|| format!("{kernel}: reference interpreter"))?;
+    let c = build(&w.module, 0, arch).with_context(|| format!("{kernel}/{}", arch.name()))?;
+    let mut fcfg = cfg.clone();
+    fcfg.fault = Some(FaultInjector::new(plan.clone()));
+    let sim = match simulate(&c, &w.args, w.memory.clone(), &fcfg) {
+        Ok(s) => s,
+        Err(e) => return Ok(Some(format!("simulation failed under plan: {e:#}"))),
+    };
+    if let Some((ai, i)) = memory_diff(&sim.memory, &reference.memory) {
+        return Ok(Some(format!(
+            "memory diverges at @{}[{}]: machine {} vs reference {}",
+            w.module.arrays[ai].name, i, sim.memory[ai][i], reference.memory[ai][i]
+        )));
+    }
+    Ok(None)
+}
+
+/// Greedily shrink a failing plan: drop events one at a time, then the
+/// mis-speculation override, keeping each removal only if the failure
+/// still reproduces on the same kernel × arch cell.
+pub fn minimize_plan(
+    kernel: &str,
+    plan: &FaultPlan,
+    arch: Arch,
+    cfg: &MachineConfig,
+) -> Result<FaultPlan> {
+    let mut cur = plan.clone();
+    let mut i = 0;
+    while i < cur.events.len() {
+        let mut cand = cur.clone();
+        cand.events.remove(i);
+        if check_plan(kernel, &cand, arch, cfg)?.is_some() {
+            cur = cand;
+        } else {
+            i += 1;
+        }
+    }
+    if cur.misspec.is_some() {
+        let mut cand = cur.clone();
+        cand.misspec = None;
+        if check_plan(kernel, &cand, arch, cfg)?.is_some() {
+            cur = cand;
+        }
+    }
+    Ok(cur)
+}
+
+/// Run `plans` generated fault plans for `kernel` across `archs`,
+/// collecting (and minimizing) every divergence.
+pub fn fuzz_kernel(
+    kernel: &str,
+    base_seed: u64,
+    plans: u64,
+    archs: &[Arch],
+    cfg: &MachineConfig,
+    verbose: bool,
+) -> Result<FuzzOutcome> {
+    let mut failures = Vec::new();
+    for index in 0..plans {
+        let plan = FaultPlan::generate(base_seed, index);
+        if verbose {
+            println!("plan {:>3}/{plans}: {plan}", index + 1);
+        }
+        for &arch in archs {
+            if let Some(desc) = check_plan(kernel, &plan, arch, cfg)? {
+                let minimized = minimize_plan(kernel, &plan, arch, cfg)?;
+                failures.push(FuzzFailure {
+                    kernel: kernel.to_string(),
+                    plan_index: index,
+                    plan_seed: plan.seed,
+                    base_seed,
+                    arch,
+                    desc,
+                    minimized,
+                });
+            }
+        }
+    }
+    Ok(FuzzOutcome { kernel: kernel.to_string(), plans, archs: archs.to_vec(), failures })
+}

@@ -1,0 +1,22 @@
+//! Deterministic fault injection for the DAE timing model.
+//!
+//! The paper's speculation mechanism is only trustworthy if poison-based
+//! recovery preserves sequential consistency under *adversarial* timing,
+//! not just the default latencies one seed happens to exercise. This
+//! subsystem stresses exactly the places decoupled queue machines are
+//! fragile — channel skew, LSQ pressure, SRAM latency spikes,
+//! mis-speculation storms — while keeping every run replayable:
+//!
+//! - [`plan`] — seeded [`FaultPlan`] generation and the stateless
+//!   [`FaultInjector`] the machine consults at its hook points
+//!   (`Channels::push/pop`, LSQ admission, memory port grants);
+//! - [`harness`] — the `dae-spec fuzz` differential harness: every plan
+//!   runs across STA/DAE/SPEC and must match the reference interpreter
+//!   bit-for-bit ([`crate::sim::memory_diff`]), with greedy
+//!   minimization of failing plans.
+
+pub mod harness;
+pub mod plan;
+
+pub use harness::{check_plan, fuzz_kernel, minimize_plan, FuzzFailure, FuzzOutcome};
+pub use plan::{FaultEvent, FaultInjector, FaultPlan, FaultSite};

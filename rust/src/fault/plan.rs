@@ -1,0 +1,341 @@
+//! Deterministic fault plans and the injector the machine consults.
+//!
+//! A [`FaultPlan`] is a small list of [`FaultEvent`]s, each perturbing one
+//! hook point of the timing model inside a cycle window. Plans are
+//! generated from a seed with the repo PRNG, so `fuzz --seed S` replays
+//! bit-identically; the injector itself is *stateless* — every hook is a
+//! pure function of `(plan seed, site, timestamp)` — so a shared
+//! `&MachineConfig` can carry it across the runner's scoped threads.
+//!
+//! Timing sites only stretch latencies and squeeze capacities; they can
+//! never change a committed value, which is exactly what lets the fuzz
+//! harness assert bit-exact memory equivalence against the reference
+//! interpreter. The two *functional* sites (`WedgeConsume`,
+//! `DropPoison`) exist for the robustness tests — a stall-forever fault
+//! that must surface as a `StallDiagnostic`, and a deliberate
+//! poison-drop bug the differential harness must catch — and are never
+//! emitted by [`FaultPlan::generate`].
+
+use crate::util::Rng;
+use std::fmt;
+
+/// A hook point in `sim/machine.rs` where a fault can act.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Extra latency on a channel push (AGU requests, CU values, poisons,
+    /// DU load-value delivery).
+    ChanPushDelay,
+    /// Extra stall cycles on a `consume_val` pop.
+    ChanPopStall,
+    /// Extra SRAM read latency (STA loads and DU load issue).
+    MemReadDelay,
+    /// Extra SRAM write latency (STA stores and DU store commit).
+    MemWriteDelay,
+    /// Squeeze the LSQ load queue down to `magnitude` entries (floor 1).
+    LsqLoadSqueeze,
+    /// Squeeze the LSQ store queue down to `magnitude` entries (floor 1).
+    LsqStoreSqueeze,
+    /// FUNCTIONAL (test-only): block every `consume_val` whose operand has
+    /// arrived — wedges the machine so the deadlock watchdog must fire.
+    WedgeConsume,
+    /// FUNCTIONAL (test-only): the DU ignores the poison bit and commits
+    /// the placeholder value — the injected mis-speculation-recovery bug
+    /// the differential fuzz harness is required to catch.
+    DropPoison,
+}
+
+impl FaultSite {
+    /// All sites that only perturb timing (safe for equivalence fuzzing).
+    pub const TIMING: [FaultSite; 6] = [
+        FaultSite::ChanPushDelay,
+        FaultSite::ChanPopStall,
+        FaultSite::MemReadDelay,
+        FaultSite::MemWriteDelay,
+        FaultSite::LsqLoadSqueeze,
+        FaultSite::LsqStoreSqueeze,
+    ];
+
+    pub fn is_timing_only(self) -> bool {
+        !matches!(self, FaultSite::WedgeConsume | FaultSite::DropPoison)
+    }
+
+    /// Stable tag mixed into the jitter hash.
+    fn tag(self) -> u64 {
+        match self {
+            FaultSite::ChanPushDelay => 1,
+            FaultSite::ChanPopStall => 2,
+            FaultSite::MemReadDelay => 3,
+            FaultSite::MemWriteDelay => 4,
+            FaultSite::LsqLoadSqueeze => 5,
+            FaultSite::LsqStoreSqueeze => 6,
+            FaultSite::WedgeConsume => 7,
+            FaultSite::DropPoison => 8,
+        }
+    }
+}
+
+/// One fault, active for timestamps in `[from, until)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub site: FaultSite,
+    pub from: u64,
+    pub until: u64,
+    /// Delay amplitude in cycles for latency sites; target capacity for
+    /// squeeze sites; ignored (any non-zero) for the functional sites.
+    pub magnitude: u64,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}@[{},{})x{}", self.site, self.from, self.until, self.magnitude)
+    }
+}
+
+/// A deterministic, replayable fault schedule plus an optional
+/// mis-speculation storm (override of the workload generator's
+/// mis-speculation-rate knob, aimed at the speculated store ops).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of this plan: drives both the event schedule, the jitter
+    /// hash, and the workload data the fuzz harness generates.
+    pub seed: u64,
+    /// Index within the fuzz batch (printed for reproduction).
+    pub index: u64,
+    pub events: Vec<FaultEvent>,
+    /// Mis-speculation-rate override for kernels that support the knob
+    /// (hist/thr/mm/spmv); `None` keeps the kernel default.
+    pub misspec: Option<f64>,
+}
+
+fn mix(mut x: u64) -> u64 {
+    // splitmix64 finalizer — cheap, well-distributed, no state
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// Empty plan (no faults) with a given seed — the clean baseline.
+    pub fn clean(seed: u64) -> FaultPlan {
+        FaultPlan { seed, index: 0, events: Vec::new(), misspec: None }
+    }
+
+    /// Generate the `index`-th plan of a `base_seed` batch: 1–5 timing
+    /// events plus an optional mis-speculation storm. Deterministic.
+    pub fn generate(base_seed: u64, index: u64) -> FaultPlan {
+        let seed = mix(base_seed ^ mix(index.wrapping_add(1)));
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(5) as usize;
+        let events = (0..n)
+            .map(|_| {
+                let site = FaultSite::TIMING[rng.below(6) as usize];
+                let from = rng.below(30_000);
+                let until = from + 1 + rng.below(10_000);
+                let magnitude = match site {
+                    FaultSite::LsqLoadSqueeze | FaultSite::LsqStoreSqueeze => 1 + rng.below(4),
+                    _ => 1 + rng.below(24),
+                };
+                FaultEvent { site, from, until, magnitude }
+            })
+            .collect();
+        // mis-speculation storm: half the plans pin the rate to an extreme
+        const RATES: [f64; 7] = [0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0];
+        let misspec = rng.chance(0.5).then(|| RATES[rng.below(RATES.len() as u64) as usize]);
+        FaultPlan { seed, index, events, misspec }
+    }
+
+    /// A stall-forever plan: every consume wedges from cycle 0 on. Used
+    /// by the watchdog/deadlock tests; never generated by `generate`.
+    pub fn wedge() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            index: 0,
+            events: vec![FaultEvent {
+                site: FaultSite::WedgeConsume,
+                from: 0,
+                until: u64::MAX,
+                magnitude: 1,
+            }],
+            misspec: None,
+        }
+    }
+
+    /// Whether every event is timing-only (memory equivalence must hold).
+    pub fn is_timing_only(&self) -> bool {
+        self.events.iter().all(|e| e.site.is_timing_only())
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed=0x{:016x} misspec=", self.seed)?;
+        match self.misspec {
+            Some(r) => write!(f, "{r}")?,
+            None => write!(f, "default")?,
+        }
+        write!(f, " events=[")?;
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{e}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// The stateless hook object the machine consults. Carried in
+/// `MachineConfig`; `Clone + Send + Sync` so the runner's scoped threads
+/// can share one config.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultInjector { plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Magnitude of the first event of `site` active at `t`.
+    fn magnitude(&self, site: FaultSite, t: u64) -> Option<u64> {
+        self.plan
+            .events
+            .iter()
+            .find(|e| e.site == site && e.from <= t && t < e.until)
+            .map(|e| e.magnitude)
+    }
+
+    /// Deterministic jitter in `[0, magnitude]` for `site` at `t`.
+    fn jitter(&self, site: FaultSite, t: u64) -> u64 {
+        match self.magnitude(site, t) {
+            None | Some(0) => 0,
+            Some(m) => mix(self.plan.seed ^ (site.tag() << 56) ^ t) % (m + 1),
+        }
+    }
+
+    pub fn chan_push_delay(&self, t: u64) -> u64 {
+        self.jitter(FaultSite::ChanPushDelay, t)
+    }
+
+    pub fn chan_pop_stall(&self, t: u64) -> u64 {
+        self.jitter(FaultSite::ChanPopStall, t)
+    }
+
+    pub fn mem_read_extra(&self, t: u64) -> u64 {
+        self.jitter(FaultSite::MemReadDelay, t)
+    }
+
+    pub fn mem_write_extra(&self, t: u64) -> u64 {
+        self.jitter(FaultSite::MemWriteDelay, t)
+    }
+
+    /// Effective load-queue size at `t` (never below 1).
+    pub fn ld_q(&self, base: usize, t: u64) -> usize {
+        match self.magnitude(FaultSite::LsqLoadSqueeze, t) {
+            Some(m) => base.min((m as usize).max(1)),
+            None => base,
+        }
+    }
+
+    /// Effective store-queue size at `t` (never below 1).
+    pub fn st_q(&self, base: usize, t: u64) -> usize {
+        match self.magnitude(FaultSite::LsqStoreSqueeze, t) {
+            Some(m) => base.min((m as usize).max(1)),
+            None => base,
+        }
+    }
+
+    /// Functional: should a consume whose operand arrived at `t` wedge?
+    pub fn wedge_consume(&self, t: u64) -> bool {
+        self.magnitude(FaultSite::WedgeConsume, t).is_some()
+    }
+
+    /// Functional: should the DU drop the poison bit of a store value
+    /// arriving at `t` (i.e. commit it — the injected bug)?
+    pub fn drop_poison(&self, t: u64) -> bool {
+        self.magnitude(FaultSite::DropPoison, t).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        for i in 0..20 {
+            assert_eq!(FaultPlan::generate(42, i), FaultPlan::generate(42, i));
+        }
+        assert_ne!(FaultPlan::generate(42, 0), FaultPlan::generate(42, 1));
+        assert_ne!(FaultPlan::generate(42, 0), FaultPlan::generate(43, 0));
+    }
+
+    #[test]
+    fn generated_plans_are_timing_only() {
+        for i in 0..50 {
+            let p = FaultPlan::generate(7, i);
+            assert!(p.is_timing_only(), "plan {i} has a functional fault: {p}");
+            assert!(!p.events.is_empty());
+        }
+    }
+
+    #[test]
+    fn jitter_respects_windows_and_amplitude() {
+        let plan = FaultPlan {
+            seed: 99,
+            index: 0,
+            events: vec![FaultEvent {
+                site: FaultSite::MemReadDelay,
+                from: 100,
+                until: 200,
+                magnitude: 7,
+            }],
+            misspec: None,
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.mem_read_extra(99), 0);
+        assert_eq!(inj.mem_read_extra(200), 0);
+        let mut any_nonzero = false;
+        for t in 100..200 {
+            let j = inj.mem_read_extra(t);
+            assert!(j <= 7, "jitter {j} above amplitude at t={t}");
+            assert_eq!(j, inj.mem_read_extra(t), "jitter must be pure in t");
+            any_nonzero |= j > 0;
+        }
+        assert!(any_nonzero, "a 100-cycle burst at amplitude 7 must fire");
+        // other sites are untouched
+        assert_eq!(inj.chan_push_delay(150), 0);
+    }
+
+    #[test]
+    fn squeezes_floor_at_one() {
+        let plan = FaultPlan {
+            seed: 1,
+            index: 0,
+            events: vec![FaultEvent {
+                site: FaultSite::LsqStoreSqueeze,
+                from: 0,
+                until: u64::MAX,
+                magnitude: 0,
+            }],
+            misspec: None,
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.st_q(32, 10), 1);
+        assert_eq!(inj.ld_q(4, 10), 4, "load queue unaffected");
+    }
+
+    #[test]
+    fn wedge_plan_blocks_consumes() {
+        let inj = FaultInjector::new(FaultPlan::wedge());
+        assert!(inj.wedge_consume(0));
+        assert!(inj.wedge_consume(u64::MAX - 1));
+        assert!(!inj.drop_poison(0));
+    }
+}

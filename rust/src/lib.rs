@@ -19,18 +19,25 @@
 //! - [`area`] — an analytical ALM area model standing in for Quartus.
 //! - [`workloads`] — the nine paper benchmarks, data generators, and the
 //!   Fig. 7 nested-if template.
-//! - [`coordinator`] — experiment orchestration: configs, threaded runs,
-//!   paper-format reports.
-//! - [`runtime`] — PJRT-backed execution of AOT-compiled JAX/Pallas
+//! - [`coordinator`] — experiment orchestration: configs, threaded runs
+//!   (panic-safe, partial-suite tolerant), paper-format reports.
+//! - [`fault`] — deterministic fault injection (latency spikes, channel
+//!   jitter, LSQ squeezes, mis-speculation storms) and the `fuzz`
+//!   differential harness asserting bit-exact equivalence against the
+//!   reference interpreter.
+//! - `runtime` — PJRT-backed execution of AOT-compiled JAX/Pallas
 //!   artifacts and the vectorised speculation engine (paper §10 future
-//!   work).
+//!   work); gated behind the `pjrt` feature so the default build has no
+//!   XLA dependency.
 //! - [`util`] — PRNG, mini CLI, bench + property-test harnesses (the
 //!   offline build has no clap/criterion/proptest).
 
 pub mod analysis;
 pub mod area;
 pub mod coordinator;
+pub mod fault;
 pub mod ir;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod transform;

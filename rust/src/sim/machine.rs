@@ -3,14 +3,17 @@
 //! the model description.
 
 use super::interp::{clamp_idx, eval_fbin, eval_fcmp, eval_ibin, eval_icmp};
+use super::stall::{ChannelStat, LsqStat, StallDiagnostic, StallReason, UnitStat};
 use super::trace::Trace;
 use super::{MachineConfig, Memory};
+use crate::fault::FaultInjector;
 use crate::ir::types::Val;
 use crate::ir::{ArrayId, BlockId, ChanKind, Function, Module, Op, Terminator};
 use crate::transform::{Arch, Compiled};
 use anyhow::{anyhow, bail, Result};
 use crate::util::FxHashMap;
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 #[derive(Debug)]
 pub struct SimResult {
@@ -236,6 +239,8 @@ struct SimCtx<'a> {
     stores_poisoned: u64,
     per_mem: FxHashMap<u32, (u64, u64)>,
     commit_log: Vec<(u32, i64, Val)>,
+    /// Cooperative wall-clock deadline (from `cfg.wall_timeout_ms`).
+    deadline: Option<Instant>,
 }
 
 impl SimCtx<'_> {
@@ -244,6 +249,83 @@ impl SimCtx<'_> {
             self.max_t = t;
         }
     }
+
+    fn fault(&self) -> Option<&FaultInjector> {
+        self.cfg.fault.as_ref()
+    }
+
+    /// Channel push latency at time `t`: base + injected jitter.
+    fn push_lat(&self, t: u64) -> u64 {
+        self.cfg.chan_lat + self.fault().map_or(0, |f| f.chan_push_delay(t))
+    }
+
+    fn read_lat(&self, t: u64) -> u64 {
+        self.cfg.mem_read_lat + self.fault().map_or(0, |f| f.mem_read_extra(t))
+    }
+
+    fn write_lat(&self, t: u64) -> u64 {
+        self.cfg.mem_write_lat + self.fault().map_or(0, |f| f.mem_write_extra(t))
+    }
+
+    /// Effective LSQ load-queue size at `t` (fault squeeze, floor 1).
+    fn eff_ld_q(&self, t: u64) -> usize {
+        self.fault().map_or(self.cfg.ld_q, |f| f.ld_q(self.cfg.ld_q, t))
+    }
+
+    /// Effective LSQ store-queue size at `t` (fault squeeze, floor 1).
+    fn eff_st_q(&self, t: u64) -> usize {
+        self.fault().map_or(self.cfg.st_q, |f| f.st_q(self.cfg.st_q, t))
+    }
+
+    fn over_deadline(&self) -> bool {
+        matches!(self.deadline, Some(d) if Instant::now() >= d)
+    }
+
+    fn key_name(&self, k: &Key) -> String {
+        match k {
+            Key::Req(a) => format!("req(@{})", self.m.array(*a).name),
+            Key::StVal(a) => format!("stval(@{})", self.m.array(*a).name),
+            Key::LdVal(a, mem) => format!("ldval(@{},m{})", self.m.array(*a).name, mem),
+            Key::LdValAgu(a, mem) => format!("ldval_agu(@{},m{})", self.m.array(*a).name, mem),
+        }
+    }
+
+    /// Snapshot of every non-empty channel, for stall diagnostics.
+    fn chan_stats(&self) -> Vec<ChannelStat> {
+        let mut v: Vec<ChannelStat> = self
+            .chans
+            .map
+            .iter()
+            .filter(|(_, c)| !c.q.is_empty())
+            .map(|(k, c)| ChannelStat {
+                name: self.key_name(k),
+                occupancy: c.q.len(),
+                last_push: c.last_push,
+                last_pop: c.last_pop,
+            })
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    fn stall_error(
+        &self,
+        reason: StallReason,
+        units: Vec<UnitStat>,
+        lsqs: Vec<LsqStat>,
+    ) -> anyhow::Error {
+        anyhow::Error::new(StallDiagnostic {
+            reason,
+            units,
+            channels: self.chan_stats(),
+            lsqs,
+            max_t: self.max_t,
+        })
+    }
+}
+
+fn deadline_from(cfg: &MachineConfig) -> Option<Instant> {
+    (cfg.wall_timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(cfg.wall_timeout_ms))
 }
 
 impl<'a> Unit<'a> {
@@ -268,6 +350,15 @@ impl<'a> Unit<'a> {
             sta_store_commit: FxHashMap::default(),
             sta_read_port: FxHashMap::default(),
             sta_write_port: FxHashMap::default(),
+        }
+    }
+
+    fn stat(&self) -> UnitStat {
+        UnitStat {
+            unit: self.name.to_string(),
+            t_ctrl: self.t_ctrl,
+            dyn_instrs: self.dyn_instrs,
+            done: self.done,
         }
     }
 
@@ -329,7 +420,23 @@ impl<'a> Unit<'a> {
             let instr = f.instr(iid);
             self.dyn_instrs += 1;
             if self.dyn_instrs > ctx.cfg.max_dyn_instrs {
-                bail!("@{}: exceeded max dynamic instructions", f.name);
+                return Err(ctx
+                    .stall_error(
+                        StallReason::InstrBudget {
+                            unit: self.name.to_string(),
+                            limit: ctx.cfg.max_dyn_instrs,
+                        },
+                        vec![self.stat()],
+                        vec![],
+                    )
+                    .context(format!("@{}: exceeded max dynamic instructions", f.name)));
+            }
+            if self.dyn_instrs & 0x3FF == 0 && ctx.over_deadline() {
+                return Err(ctx.stall_error(
+                    StallReason::WallClock { ms: ctx.cfg.wall_timeout_ms },
+                    vec![self.stat()],
+                    vec![],
+                ));
             }
 
             macro_rules! get {
@@ -401,7 +508,7 @@ impl<'a> Unit<'a> {
                     let port = self.sta_read_port.entry(*arr).or_insert(0);
                     let t_issue = tv!(idx).max(self.t_ctrl).max(barrier).max(*port);
                     *port = t_issue + 1;
-                    let t_done = t_issue + ctx.cfg.mem_read_lat;
+                    let t_done = t_issue + ctx.read_lat(t_issue);
                     ctx.bump(t_done);
                     if let Some(tr) = &mut ctx.trace {
                         tr.push("sta", "ld_issue", 0, t_issue);
@@ -419,7 +526,7 @@ impl<'a> Unit<'a> {
                     let port = self.sta_write_port.entry(*arr).or_insert(0);
                     let t_w = tv!(idx).max(tv!(val)).max(self.t_ctrl).max(*port);
                     *port = t_w + 1;
-                    let t_commit = t_w + ctx.cfg.mem_write_lat;
+                    let t_commit = t_w + ctx.write_lat(t_w);
                     ctx.memory[arr.index()][i as usize] = v;
                     ctx.commit_log.push((0, i, v));
                     let e = self.sta_store_commit.entry(*arr).or_insert(0);
@@ -436,10 +543,11 @@ impl<'a> Unit<'a> {
                     let is_store = matches!(instr.op, Op::SendStAddr { .. });
                     let arr = ctx.m.chan(*chan).arr;
                     let t = tv!(idx).max(self.t_ctrl);
+                    let lat = ctx.push_lat(t);
                     ctx.chans.push(
                         Key::Req(arr),
                         Elem { val: get!(idx), poison: false, mem: *mem, is_store, t },
-                        ctx.cfg.chan_lat,
+                        lat,
                     );
                     ctx.bump(t);
                     if let Some(tr) = &mut ctx.trace {
@@ -453,12 +561,20 @@ impl<'a> Unit<'a> {
                         ChanKind::LdValAgu => Key::LdValAgu(arr, *mem),
                         _ => Key::LdVal(arr, *mem),
                     };
+                    // A stall-forever fault wedges the consume even though
+                    // its operand has arrived (watchdog/deadlock testing).
+                    if let Some(front) = ctx.chans.front(key) {
+                        if ctx.fault().is_some_and(|fi| fi.wedge_consume(front.t)) {
+                            return Ok(StepOut::Blocked);
+                        }
+                    }
                     // Dataflow pop: stream pops are in-order and (in these
                     // slices) unconditional per iteration, so the circuit
                     // pops ahead of branch resolution — no t_ctrl term.
                     let Some((v, _poison, _m, t)) = ctx.chans.pop(key, 0) else {
                         return Ok(StepOut::Blocked);
                     };
+                    let t = t + ctx.fault().map_or(0, |fi| fi.chan_pop_stall(t));
                     ctx.bump(t);
                     if let Some(tr) = &mut ctx.trace {
                         tr.push(self.name, "consume", *mem, t);
@@ -468,10 +584,11 @@ impl<'a> Unit<'a> {
                 Op::ProduceVal { chan, mem, val } => {
                     let arr = ctx.m.chan(*chan).arr;
                     let t = tv!(val).max(self.t_ctrl);
+                    let lat = ctx.push_lat(t);
                     ctx.chans.push(
                         Key::StVal(arr),
                         Elem { val: get!(val), poison: false, mem: *mem, is_store: true, t },
-                        ctx.cfg.chan_lat,
+                        lat,
                     );
                     ctx.bump(t);
                     if let Some(tr) = &mut ctx.trace {
@@ -487,6 +604,7 @@ impl<'a> Unit<'a> {
                     let t = pred.map(|pv| tv!(pv)).unwrap_or(0).max(self.t_ctrl);
                     if fire {
                         let arr = ctx.m.chan(*chan).arr;
+                        let lat = ctx.push_lat(t);
                         ctx.chans.push(
                             Key::StVal(arr),
                             Elem {
@@ -496,7 +614,7 @@ impl<'a> Unit<'a> {
                                 is_store: true,
                                 t,
                             },
-                            ctx.cfg.chan_lat,
+                            lat,
                         );
                         if let Some(tr) = &mut ctx.trace {
                             tr.push(self.name, "poison", *mem, t);
@@ -550,18 +668,19 @@ impl<'a> Unit<'a> {
 /// loads may bypass value-pending stores but stall on an earlier
 /// unresolved store to the same address (RAW). Poisoned stores release
 /// their slot without committing.
-fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx, spec_mems: &[u32]) -> Result<bool> {
+fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
     let arr = lsq.arr;
     let mut progress = false;
 
-    // admit everything that has arrived
+    // admit everything that has arrived (fault squeezes shrink the
+    // effective queue capacities, never below 1)
     while let Some(req) = ctx.chans.pop_elem(Key::Req(arr)) {
         let mut t_enter = req.t.max(lsq.t_enter_last + 1);
         if req.is_store {
-            if lsq.store_slots.len() >= ctx.cfg.st_q {
+            if lsq.store_slots.len() >= ctx.eff_st_q(t_enter) {
                 t_enter = t_enter.max(lsq.store_slots.pop_front().unwrap());
             }
-        } else if lsq.load_slots.len() >= ctx.cfg.ld_q {
+        } else if lsq.load_slots.len() >= ctx.eff_ld_q(t_enter) {
             t_enter = t_enter.max(lsq.load_slots.pop_front().unwrap());
         }
         lsq.t_enter_last = t_enter;
@@ -610,7 +729,13 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx, spec_mems: &[u32]) -> Result<bool> {
                     );
                 }
                 ctx.chans.pop(Key::StVal(arr), 0);
-                if v.poison {
+                // DropPoison is the deliberately-injected recovery bug:
+                // the DU "loses" the poison bit and falls through to the
+                // commit path, which the differential fuzz harness must
+                // flag as a memory divergence.
+                let poison_dropped =
+                    v.poison && ctx.fault().is_some_and(|fi| fi.drop_poison(v.t));
+                if v.poison && !poison_dropped {
                     let t_resolve = e.t_enter.max(v.t);
                     lsq.store_slots.push_back(t_resolve);
                     ctx.stores_poisoned += 1;
@@ -632,7 +757,7 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx, spec_mems: &[u32]) -> Result<bool> {
                     }
                     let t_w = e.t_enter.max(v.t).max(lsq.write_port);
                     lsq.write_port = t_w + 1;
-                    let t_commit = t_w + ctx.cfg.mem_write_lat;
+                    let t_commit = t_w + ctx.write_lat(t_w);
                     ctx.memory[arr.index()][addr as usize] = v.val;
                     ctx.commit_log.push((e.req.mem, addr, v.val));
                     lsq.commit_at.insert(addr, t_commit);
@@ -666,13 +791,13 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx, spec_mems: &[u32]) -> Result<bool> {
                 let raw = lsq.commit_at.get(&addr).copied().unwrap_or(0);
                 let t_issue = e.t_enter.max(raw).max(lsq.read_port);
                 lsq.read_port = t_issue + 1;
-                let t_done = t_issue + ctx.cfg.mem_read_lat;
+                let t_done = t_issue + ctx.read_lat(t_issue);
                 ctx.bump(t_done);
                 if let Some(tr) = &mut ctx.trace {
                     tr.push("du", "ld_issue", e.req.mem, t_issue);
                 }
                 lsq.load_slots.push_back(t_done);
-                if lsq.load_slots.len() > ctx.cfg.ld_q {
+                if lsq.load_slots.len() > ctx.eff_ld_q(t_done) {
                     lsq.load_slots.pop_front();
                 }
                 // deliver through the per-op reorder buffer: the consumer
@@ -682,18 +807,19 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx, spec_mems: &[u32]) -> Result<bool> {
                 loop {
                     let rob = lsq.robs.get_mut(&mem).unwrap();
                     let Some((rv, rt)) = rob.pop_ready() else { break };
+                    let lat = ctx.push_lat(rt);
                     if ctx.cu_consumes.contains(&mem) {
                         ctx.chans.push(
                             Key::LdVal(arr, mem),
                             Elem { val: rv, poison: false, mem, is_store: false, t: rt },
-                            ctx.cfg.chan_lat,
+                            lat,
                         );
                     }
                     if ctx.agu_consumes.contains(&mem) {
                         ctx.chans.push(
                             Key::LdValAgu(arr, mem),
                             Elem { val: rv, poison: false, mem, is_store: false, t: rt },
-                            ctx.cfg.chan_lat,
+                            lat,
                         );
                     }
                 }
@@ -708,8 +834,20 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx, spec_mems: &[u32]) -> Result<bool> {
             break;
         }
     }
-    let _ = spec_mems;
     Ok(progress)
+}
+
+/// Snapshot of every non-empty per-array LSQ, for stall diagnostics.
+fn lsq_stats(lsqs: &[Lsq], m: &Module) -> Vec<LsqStat> {
+    lsqs.iter()
+        .filter(|l| !l.window.is_empty() || !l.store_slots.is_empty() || !l.load_slots.is_empty())
+        .map(|l| LsqStat {
+            array: m.array(l.arr).name.clone(),
+            window: l.window.len(),
+            store_slots: l.store_slots.len(),
+            load_slots: l.load_slots.len(),
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -740,6 +878,7 @@ pub fn simulate(
                 stores_poisoned: 0,
                 per_mem: FxHashMap::default(),
                 commit_log: Vec::new(),
+                deadline: deadline_from(cfg),
             };
             let mut unit = Unit::new(UnitKind::Sta, "sta", f, args);
             loop {
@@ -748,7 +887,9 @@ pub fn simulate(
                     break;
                 }
                 if !progressed {
-                    bail!("STA unit blocked (channel op in monolithic build?)");
+                    return Err(ctx
+                        .stall_error(StallReason::Deadlock, vec![unit.stat()], vec![])
+                        .context("STA unit blocked (channel op in monolithic build?)"));
                 }
             }
             Ok(SimResult {
@@ -764,7 +905,7 @@ pub fn simulate(
                 commit_log: ctx.commit_log,
             })
         }
-        Compiled::Dae { program, map, .. } => {
+        Compiled::Dae { program, .. } => {
             let module = &program.module;
             let mut ctx = SimCtx {
                 m: module,
@@ -779,15 +920,9 @@ pub fn simulate(
                 stores_poisoned: 0,
                 per_mem: FxHashMap::default(),
                 commit_log: Vec::new(),
+                deadline: deadline_from(cfg),
             };
-            let spec_mems: Vec<u32> = map
-                .as_ref()
-                .map(|m| {
-                    m.iter()
-                        .flat_map(|(_, rs)| rs.iter().filter(|r| r.is_store).map(|r| r.mem))
-                        .collect()
-                })
-                .unwrap_or_default();
+            let spec_mems: Vec<u32> = c.speculated_mems();
 
             let mut agu = Unit::new(UnitKind::Agu, "agu", program.agu_fn(), args);
             let mut cu = Unit::new(UnitKind::Cu, "cu", program.cu_fn(), args);
@@ -798,6 +933,9 @@ pub fn simulate(
                 .map(|(i, _)| Lsq::new(ArrayId(i as u32)))
                 .collect();
 
+            let mut rounds: u64 = 0;
+            let mut stagnant: u64 = 0;
+            let mut fingerprint: (u64, u64) = (0, 0);
             loop {
                 let mut progress = false;
                 if !agu.done {
@@ -807,7 +945,7 @@ pub fn simulate(
                     progress |= cu.run(&mut ctx)?;
                 }
                 for lsq in &mut lsqs {
-                    progress |= du_step(lsq, &mut ctx, &spec_mems)?;
+                    progress |= du_step(lsq, &mut ctx)?;
                 }
                 if agu.done && cu.done && ctx.chans.all_empty()
                     && lsqs.iter().all(|l| l.window.is_empty())
@@ -815,24 +953,42 @@ pub fn simulate(
                     break;
                 }
                 if !progress {
-                    let mut pending: Vec<String> = ctx
-                        .chans
-                        .map
-                        .iter()
-                        .filter(|(_, c)| !c.q.is_empty())
-                        .map(|(k, c)| format!("{k:?}({})", c.q.len()))
-                        .collect();
-                    for l in &lsqs {
-                        if !l.window.is_empty() {
-                            pending.push(format!("LSQ(@{})[{}]", ctx.m.array(l.arr).name, l.window.len()));
-                        }
-                    }
-                    bail!(
-                        "deadlock: agu_done={} cu_done={} pending={:?}",
-                        agu.done,
-                        cu.done,
-                        pending
-                    );
+                    return Err(ctx
+                        .stall_error(
+                            StallReason::Deadlock,
+                            vec![agu.stat(), cu.stat()],
+                            lsq_stats(&lsqs, ctx.m),
+                        )
+                        .context(format!(
+                            "deadlock: agu_done={} cu_done={}",
+                            agu.done, cu.done
+                        )));
+                }
+                // Progress watchdog: scheduler rounds can report progress
+                // (queue shuffling) without any timestamp or instruction
+                // count advancing; bail with a diagnostic instead of
+                // spinning toward max_dyn_instrs.
+                rounds += 1;
+                let fp = (ctx.max_t, agu.dyn_instrs + cu.dyn_instrs);
+                if fp == fingerprint {
+                    stagnant += 1;
+                } else {
+                    fingerprint = fp;
+                    stagnant = 0;
+                }
+                if cfg.watchdog_rounds > 0 && stagnant >= cfg.watchdog_rounds {
+                    return Err(ctx.stall_error(
+                        StallReason::Watchdog { rounds: cfg.watchdog_rounds },
+                        vec![agu.stat(), cu.stat()],
+                        lsq_stats(&lsqs, ctx.m),
+                    ));
+                }
+                if rounds & 0x3FF == 0 && ctx.over_deadline() {
+                    return Err(ctx.stall_error(
+                        StallReason::WallClock { ms: cfg.wall_timeout_ms },
+                        vec![agu.stat(), cu.stat()],
+                        lsq_stats(&lsqs, ctx.m),
+                    ));
                 }
             }
 
@@ -986,5 +1142,52 @@ exit:
             simulate_checked(&m, 0, &c, &[Val::I(64)], mem, &cfg).unwrap();
         assert!(!matches, "oracle must be functionally wrong on this input");
         assert!(sim.cycles > 0);
+    }
+
+    #[test]
+    fn wedged_machine_reports_stall_diagnostic() {
+        use crate::fault::{FaultInjector, FaultPlan};
+        let m = parse_module(FIG1C).unwrap();
+        let mem = fig1c_memory(&m);
+        // Stall-forever fault: every ConsumeVal blocks, so the machine
+        // must terminate via the structured deadlock path, not hang.
+        let cfg = MachineConfig {
+            fault: Some(FaultInjector::new(FaultPlan::wedge())),
+            ..MachineConfig::default()
+        };
+        let c = build(&m, 0, Arch::Dae).unwrap();
+        let err = simulate(&c, &[Val::I(64)], mem, &cfg).unwrap_err();
+        let diag = err
+            .downcast_ref::<StallDiagnostic>()
+            .expect("wedge must produce a StallDiagnostic root cause");
+        assert!(matches!(diag.reason, StallReason::Deadlock));
+        let pending: usize = diag.channels.iter().map(|ch| ch.occupancy).sum();
+        assert!(pending > 0, "diagnostic must list stuck channel elements");
+        assert!(!diag.units.is_empty());
+        // the rendering names the channels so a human can read the report
+        let rendered = diag.render();
+        assert!(rendered.contains("stall diagnostic"));
+        assert!(rendered.contains("chan "), "render lists channels:\n{rendered}");
+    }
+
+    #[test]
+    fn instr_budget_reports_structured_diag() {
+        let m = parse_module(FIG1C).unwrap();
+        let mem = fig1c_memory(&m);
+        let cfg = MachineConfig { max_dyn_instrs: 16, ..MachineConfig::default() };
+        let c = build(&m, 0, Arch::Sta).unwrap();
+        let err = simulate(&c, &[Val::I(64)], mem, &cfg).unwrap_err();
+        let diag = err
+            .downcast_ref::<StallDiagnostic>()
+            .expect("budget trip must produce a StallDiagnostic root cause");
+        match &diag.reason {
+            StallReason::InstrBudget { unit, limit } => {
+                assert_eq!(unit, "sta");
+                assert_eq!(*limit, 16);
+            }
+            other => panic!("expected InstrBudget, got {other:?}"),
+        }
+        assert_eq!(diag.units.len(), 1);
+        assert!(diag.units[0].dyn_instrs >= 16);
     }
 }

@@ -27,10 +27,12 @@
 
 pub mod interp;
 pub mod machine;
+pub mod stall;
 pub mod trace;
 
 pub use interp::{interpret, InterpResult};
 pub use machine::{simulate, SimResult};
+pub use stall::{ChannelStat, LsqStat, StallDiagnostic, StallReason, UnitStat};
 pub use trace::{Trace, TraceEvent};
 
 use crate::ir::types::Val;
@@ -56,8 +58,21 @@ pub struct MachineConfig {
     pub mul_lat: u64,
     /// Latency of divide/remainder.
     pub div_lat: u64,
-    /// Safety valve: abort after this many dynamic instructions per unit.
+    /// Safety valve: abort after this many dynamic instructions per unit
+    /// (returns a structured [`StallDiagnostic`] on trip).
     pub max_dyn_instrs: u64,
+    /// Progress watchdog: abort with a [`StallDiagnostic`] when no unit
+    /// timestamp or instruction count advances across this many
+    /// consecutive scheduler rounds. 0 disables the watchdog.
+    pub watchdog_rounds: u64,
+    /// Cooperative wall-clock timeout in milliseconds, checked
+    /// periodically inside the machine loop (so a wedged simulation
+    /// terminates with a [`StallDiagnostic`] instead of hanging its
+    /// runner thread). 0 disables the timeout.
+    pub wall_timeout_ms: u64,
+    /// Deterministic fault injection (latency spikes, channel jitter,
+    /// LSQ squeezes — see [`crate::fault`]). `None` runs clean.
+    pub fault: Option<crate::fault::FaultInjector>,
     /// Record a pipeline trace (Fig. 2 reproduction).
     pub trace: bool,
 }
@@ -74,6 +89,9 @@ impl Default for MachineConfig {
             mul_lat: 3,
             div_lat: 12,
             max_dyn_instrs: 200_000_000,
+            watchdog_rounds: 10_000,
+            wall_timeout_ms: 0,
+            fault: None,
             trace: false,
         }
     }

@@ -1,0 +1,135 @@
+//! Structured stall diagnostics.
+//!
+//! When the machine stops making progress — a channel deadlock, the
+//! instruction-budget safety valve, the no-timestamp-advance watchdog,
+//! or the cooperative wall-clock timeout — the simulator returns a
+//! [`StallDiagnostic`] carrying a snapshot of the machine state instead
+//! of an opaque error string: per-unit control timestamps and dynamic
+//! instruction counts, per-channel occupancy with last push/pop times,
+//! and per-array LSQ fill. The error is an `anyhow` root cause, so
+//! callers recover it with `err.downcast_ref::<StallDiagnostic>()`;
+//! `coordinator::report::print_stall` renders it for the CLI.
+
+use std::fmt;
+
+/// Why the machine stopped.
+#[derive(Clone, Debug)]
+pub enum StallReason {
+    /// No unit executed an instruction and no LSQ made progress, but
+    /// work is still pending.
+    Deadlock,
+    /// A unit exceeded `MachineConfig::max_dyn_instrs`.
+    InstrBudget { unit: String, limit: u64 },
+    /// No unit timestamp or instruction count advanced for
+    /// `MachineConfig::watchdog_rounds` consecutive scheduler rounds.
+    Watchdog { rounds: u64 },
+    /// The cooperative wall-clock budget (`MachineConfig::wall_timeout_ms`)
+    /// expired mid-simulation.
+    WallClock { ms: u64 },
+}
+
+impl fmt::Display for StallReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StallReason::Deadlock => write!(f, "deadlock (pending work, no unit can progress)"),
+            StallReason::InstrBudget { unit, limit } => {
+                write!(f, "unit {unit} exceeded max dynamic instructions ({limit})")
+            }
+            StallReason::Watchdog { rounds } => {
+                write!(f, "watchdog: no timestamp advance for {rounds} scheduler rounds")
+            }
+            StallReason::WallClock { ms } => write!(f, "wall-clock timeout ({ms} ms) expired"),
+        }
+    }
+}
+
+/// One unit's state at stall time.
+#[derive(Clone, Debug)]
+pub struct UnitStat {
+    pub unit: String,
+    pub t_ctrl: u64,
+    pub dyn_instrs: u64,
+    pub done: bool,
+}
+
+/// One non-empty channel's state at stall time.
+#[derive(Clone, Debug)]
+pub struct ChannelStat {
+    pub name: String,
+    pub occupancy: usize,
+    /// Timestamp of the most recent push / pop on the stream.
+    pub last_push: u64,
+    pub last_pop: u64,
+}
+
+/// One non-empty per-array LSQ's state at stall time.
+#[derive(Clone, Debug)]
+pub struct LsqStat {
+    pub array: String,
+    /// Admitted, unresolved requests in the window.
+    pub window: usize,
+    pub store_slots: usize,
+    pub load_slots: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct StallDiagnostic {
+    pub reason: StallReason,
+    pub units: Vec<UnitStat>,
+    pub channels: Vec<ChannelStat>,
+    pub lsqs: Vec<LsqStat>,
+    /// Latest event timestamp when the stall was detected.
+    pub max_t: u64,
+}
+
+impl StallDiagnostic {
+    /// Full multi-line report (the CLI's verbose rendering; `Display`
+    /// stays single-line so it embeds cleanly in an anyhow chain).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "-- stall diagnostic: {} (max_t={}) --", self.reason, self.max_t);
+        for u in &self.units {
+            let _ = writeln!(
+                s,
+                "  unit {:<4} t_ctrl={:<10} dyn_instrs={:<12} done={}",
+                u.unit, u.t_ctrl, u.dyn_instrs, u.done
+            );
+        }
+        if self.channels.is_empty() {
+            let _ = writeln!(s, "  channels: all empty");
+        }
+        for c in &self.channels {
+            let _ = writeln!(
+                s,
+                "  chan {:<24} occupancy={:<6} last_push={:<10} last_pop={}",
+                c.name, c.occupancy, c.last_push, c.last_pop
+            );
+        }
+        for l in &self.lsqs {
+            let _ = writeln!(
+                s,
+                "  lsq  @{:<23} window={:<9} store_slots={:<9} load_slots={}",
+                l.array, l.window, l.store_slots, l.load_slots
+            );
+        }
+        s
+    }
+}
+
+impl fmt::Display for StallDiagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let pending: usize = self.channels.iter().map(|c| c.occupancy).sum();
+        write!(
+            f,
+            "machine stalled: {} [{} channel(s) pending, {} element(s); {} LSQ(s) non-empty; max_t={}]",
+            self.reason,
+            self.channels.len(),
+            pending,
+            self.lsqs.len(),
+            self.max_t
+        )
+    }
+}
+
+impl std::error::Error for StallDiagnostic {}

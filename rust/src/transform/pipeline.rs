@@ -69,6 +69,23 @@ impl Compiled {
             Compiled::Dae { stats, .. } => Some(stats),
         }
     }
+
+    /// Memory-op ids of speculatively hoisted *stores* — the ops whose
+    /// request/poison traffic the simulator attributes to speculation
+    /// (mis-speculation-rate accounting, fault-storm targeting).
+    pub fn speculated_mems(&self) -> Vec<u32> {
+        match self {
+            Compiled::Monolithic { .. } => Vec::new(),
+            Compiled::Dae { map, .. } => map
+                .as_ref()
+                .map(|m| {
+                    m.iter()
+                        .flat_map(|(_, rs)| rs.iter().filter(|r| r.is_store).map(|r| r.mem))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        }
+    }
 }
 
 /// Compile `(m, f)` — `f` must be `m.funcs[func_idx]` — for `arch`.

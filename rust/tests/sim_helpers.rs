@@ -1,0 +1,108 @@
+//! Tests for the `sim/mod.rs` helpers (`memory_diff`, `zero_memory`)
+//! and a minimum-capacity stress run: `chan_cap=1`, `ld_q=1`, `st_q=1`
+//! must not deadlock any default kernel and must preserve results.
+
+use dae_spec::coordinator::build_workload;
+use dae_spec::ir::parser::parse_module;
+use dae_spec::ir::types::Val;
+use dae_spec::sim::machine::simulate;
+use dae_spec::sim::{interpret, memory_diff, zero_memory, MachineConfig, Memory};
+use dae_spec::transform::{build, Arch};
+
+#[test]
+fn memory_diff_is_bit_exact_on_nan() {
+    let nan1 = f64::NAN;
+    let nan2 = f64::from_bits(nan1.to_bits() ^ 1); // a different NaN payload
+    assert!(nan1.is_nan() && nan2.is_nan());
+
+    let a: Memory = vec![vec![Val::F(nan1), Val::F(1.0)]];
+    let same: Memory = vec![vec![Val::F(nan1), Val::F(1.0)]];
+    // identical bit patterns — NaN == NaN under bits_eq, unlike IEEE ==
+    assert_eq!(memory_diff(&a, &same), None);
+
+    let other_payload: Memory = vec![vec![Val::F(nan2), Val::F(1.0)]];
+    assert_eq!(memory_diff(&a, &other_payload), Some((0, 0)));
+
+    // +0.0 and -0.0 differ bitwise even though they compare IEEE-equal
+    let pz: Memory = vec![vec![Val::F(0.0)]];
+    let nz: Memory = vec![vec![Val::F(-0.0)]];
+    assert_eq!(memory_diff(&pz, &nz), Some((0, 0)));
+}
+
+#[test]
+fn memory_diff_reports_first_mismatch_index() {
+    let mk = || -> Memory {
+        vec![
+            (0..4).map(Val::I).collect(),
+            (0..6).map(|i| Val::I(i * 10)).collect(),
+        ]
+    };
+    let a = mk();
+    let mut b = mk();
+    assert_eq!(memory_diff(&a, &b), None);
+    b[1][3] = Val::I(-7);
+    assert_eq!(memory_diff(&a, &b), Some((1, 3)));
+    // an earlier mismatch wins
+    b[0][2] = Val::I(99);
+    assert_eq!(memory_diff(&a, &b), Some((0, 2)));
+}
+
+#[test]
+fn zero_memory_types_elements_per_array() {
+    let m = parse_module(
+        r#"
+array @ints : i64[4]
+array @floats : f64[3]
+
+func @noop() {
+entry:
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let mem = zero_memory(&m);
+    assert_eq!(mem.len(), 2);
+    assert_eq!(mem[0].len(), 4);
+    assert_eq!(mem[1].len(), 3);
+    for v in &mem[0] {
+        assert!(v.bits_eq(Val::I(0)), "i64 array zeroes as integer 0, got {v:?}");
+    }
+    for v in &mem[1] {
+        assert!(v.bits_eq(Val::F(0.0)), "f64 array zeroes as float 0.0, got {v:?}");
+    }
+}
+
+#[test]
+fn min_capacity_stress_completes_and_matches() {
+    // Minimum queue everywhere: 1-deep channels, 1 load in flight,
+    // 1 store slot. The machine must still terminate (no channel
+    // deadlock) and commit exactly the reference memory.
+    let cfg = MachineConfig {
+        chan_cap: 1,
+        ld_q: 1,
+        st_q: 1,
+        ..MachineConfig::default()
+    };
+    for kernel in ["hist", "thr"] {
+        let w = build_workload(kernel, 11, None).unwrap();
+        let reference = interpret(
+            &w.module,
+            &w.module.funcs[0],
+            &w.args,
+            w.memory.clone(),
+            cfg.max_dyn_instrs,
+        )
+        .unwrap();
+        for arch in [Arch::Sta, Arch::Dae, Arch::Spec] {
+            let c = build(&w.module, 0, arch).unwrap();
+            let sim = simulate(&c, &w.args, w.memory.clone(), &cfg)
+                .unwrap_or_else(|e| panic!("{kernel}/{arch:?} at min capacity: {e:#}"));
+            assert_eq!(
+                memory_diff(&sim.memory, &reference.memory),
+                None,
+                "{kernel}/{arch:?} diverges at minimum queue capacity"
+            );
+        }
+    }
+}
