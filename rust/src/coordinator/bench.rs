@@ -1,0 +1,173 @@
+//! `dae-spec bench` — host-side simulator throughput harness.
+//!
+//! Compiles each kernel × arch cell once, validates it with a first
+//! simulation (reference-checked timing inputs come from the workload
+//! builders), then times repeated `simulate` calls with [`Bench`].
+//! Results go to `BENCH_sim.json` (schema `dae-spec-bench/v1`); pass
+//! `--baseline BENCH_sim.json --max-regress 10` to fail when a cell's
+//! best time regresses by more than the given percentage.
+
+use crate::sim::MachineConfig;
+use crate::transform::build;
+use crate::util::{Args, Bench, Json};
+use anyhow::{bail, Context, Result};
+
+struct Cell {
+    kernel: String,
+    arch: &'static str,
+    mean_ns: f64,
+    stddev_ns: f64,
+    min_ns: f64,
+    cycles: u64,
+    dyn_instrs: u64,
+}
+
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 2026);
+    let warmup = args.get_u64("warmup", 2) as usize;
+    let samples = (args.get_u64("samples", 10) as usize).max(1);
+    let out_path = args.get("out").unwrap_or("BENCH_sim.json");
+    let archs = super::parse_archs(Some(args.get("arch").unwrap_or("sta,dae,spec")))?;
+    let kernels: Vec<String> = match args.get("kernels") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => crate::workloads::PAPER_KERNELS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let bench = Bench::new(warmup, samples);
+    let cfg = MachineConfig::default();
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut total_instrs = 0.0;
+    let mut total_secs = 0.0;
+
+    for kernel in &kernels {
+        let w = super::build_workload(kernel, seed, None)
+            .with_context(|| format!("bench: building workload {kernel}"))?;
+        for &arch in &archs {
+            let c = build(&w.module, 0, arch)
+                .with_context(|| format!("bench: compiling {kernel}/{}", arch.name()))?;
+            // one validated run up front: a cell that stalls or errors
+            // should fail the harness, not poison the timing loop
+            let first = crate::sim::simulate(&c, &w.args, w.memory.clone(), &cfg)
+                .with_context(|| format!("bench: {kernel}/{}", arch.name()))?;
+            let label = format!("{kernel}/{}", arch.name());
+            let stats = bench.run(&label, || {
+                crate::sim::simulate(&c, &w.args, w.memory.clone(), &cfg)
+                    .expect("validated cell failed during timing loop")
+            });
+            total_instrs += first.dyn_instrs as f64;
+            total_secs += stats.min_ns / 1e9;
+            cells.push(Cell {
+                kernel: kernel.clone(),
+                arch: arch.name(),
+                mean_ns: stats.mean_ns,
+                stddev_ns: stats.stddev_ns,
+                min_ns: stats.min_ns,
+                cycles: first.cycles,
+                dyn_instrs: first.dyn_instrs,
+            });
+        }
+    }
+
+    println!();
+    for c in &cells {
+        let ips = c.dyn_instrs as f64 / (c.min_ns / 1e9);
+        println!(
+            "{:<12} {:<7} {:>12} cycles  {:>12} instrs  {:>9.2} M sim-instrs/s",
+            c.kernel,
+            c.arch,
+            c.cycles,
+            c.dyn_instrs,
+            ips / 1e6
+        );
+    }
+    if total_secs > 0.0 {
+        println!(
+            "\naggregate: {:.2} M simulated instrs/s over {} cell(s)",
+            total_instrs / total_secs / 1e6,
+            cells.len()
+        );
+    }
+
+    let doc = render_json(seed, warmup, samples, &cells);
+    std::fs::write(out_path, doc.render())
+        .with_context(|| format!("bench: writing {out_path}"))?;
+    println!("wrote {out_path}");
+
+    if let Some(baseline_path) = args.get("baseline") {
+        let pct = args.get_f64("max-regress", 10.0);
+        compare_baseline(baseline_path, pct, &cells)?;
+    }
+    Ok(())
+}
+
+fn render_json(seed: u64, warmup: usize, samples: usize, cells: &[Cell]) -> Json {
+    let results = cells
+        .iter()
+        .map(|c| {
+            let ips = c.dyn_instrs as f64 / (c.min_ns / 1e9);
+            Json::Obj(vec![
+                ("kernel".into(), Json::Str(c.kernel.clone())),
+                ("arch".into(), Json::Str(c.arch.into())),
+                ("mean_ns".into(), Json::Num(c.mean_ns)),
+                ("stddev_ns".into(), Json::Num(c.stddev_ns)),
+                ("min_ns".into(), Json::Num(c.min_ns)),
+                ("cycles".into(), Json::Num(c.cycles as f64)),
+                ("dyn_instrs".into(), Json::Num(c.dyn_instrs as f64)),
+                ("sim_instrs_per_sec".into(), Json::Num(ips)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::Str("dae-spec-bench/v1".into())),
+        ("seed".into(), Json::Num(seed as f64)),
+        ("warmup".into(), Json::Num(warmup as f64)),
+        ("samples".into(), Json::Num(samples as f64)),
+        ("results".into(), Json::Arr(results)),
+    ])
+}
+
+/// Compare against a previously written `BENCH_sim.json`: a cell
+/// regresses when its best (min) time exceeds the baseline's by more
+/// than `pct` percent. Cells missing from the baseline are skipped, so
+/// growing the suite never breaks the gate.
+fn compare_baseline(path: &str, pct: f64, cells: &[Cell]) -> Result<()> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("bench: reading baseline {path}"))?;
+    let doc = Json::parse(&text).with_context(|| format!("bench: parsing baseline {path}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some("dae-spec-bench/v1") {
+        bail!("bench: {path} is not a dae-spec-bench/v1 file");
+    }
+    let baseline = doc.get("results").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut regressions = Vec::new();
+    let mut compared = 0;
+    for c in cells {
+        let old = baseline.iter().find(|r| {
+            r.get("kernel").and_then(Json::as_str) == Some(c.kernel.as_str())
+                && r.get("arch").and_then(Json::as_str) == Some(c.arch)
+        });
+        let Some(old_min) = old.and_then(|r| r.get("min_ns")).and_then(Json::as_f64) else {
+            continue;
+        };
+        compared += 1;
+        if c.min_ns > old_min * (1.0 + pct / 100.0) {
+            regressions.push(format!(
+                "  {}/{}: {:.2} ms -> {:.2} ms (+{:.1}%)",
+                c.kernel,
+                c.arch,
+                old_min / 1e6,
+                c.min_ns / 1e6,
+                (c.min_ns / old_min - 1.0) * 100.0
+            ));
+        }
+    }
+    if regressions.is_empty() {
+        println!("baseline: {compared} cell(s) within {pct}% of {path}");
+        Ok(())
+    } else {
+        bail!(
+            "bench: {} cell(s) regressed by more than {pct}% vs {path}:\n{}",
+            regressions.len(),
+            regressions.join("\n")
+        )
+    }
+}

@@ -1,6 +1,7 @@
 //! Experiment coordination: threaded runs across kernels ×
 //! architectures, paper-format reports, and the CLI entrypoint.
 
+pub mod bench;
 pub mod report;
 pub mod runner;
 
@@ -15,7 +16,7 @@ USAGE:
   dae-spec repro <table1|table2|fig2|fig6|fig7|all> [--seed N]
   dae-spec run --kernel <name> [--arch sta|dae|spec|oracle] [--seed N]
                [--misspec R] [--trace] [--watchdog N] [--timeout-ms MS]
-  dae-spec fuzz [--kernel hist] [--plans 25] [--seed N] [--arch sta,dae,spec]
+  dae-spec fuzz [--kernel hist|all] [--plans 25] [--seed N] [--arch sta,dae,spec]
                 [--watchdog N] [--timeout-ms MS] [--verbose]
                 differential fault-injection fuzzing: each plan perturbs
                 timing only (SRAM latency spikes, channel push/pop jitter,
@@ -23,6 +24,12 @@ USAGE:
                 final memory must stay bit-identical to the reference
                 interpreter; failing plans are minimized and printed with
                 their replay seed
+  dae-spec bench [--kernels hist,thr,...] [--arch sta,dae,spec] [--seed N]
+                 [--samples 10] [--warmup 2] [--out BENCH_sim.json]
+                 [--baseline BENCH_sim.json] [--max-regress 10]
+                 host-side simulator throughput per kernel x arch; writes
+                 BENCH_sim.json and (with --baseline) fails if any cell's
+                 best time regresses by more than --max-regress percent
   dae-spec compile --kernel <name> [--arch ...]      dump transformed IR
   dae-spec lsq-sweep [--kernel bfs] [--sizes 4,8,16,32,64]
   dae-spec list                                      list kernels
@@ -44,6 +51,7 @@ pub fn cli_main(argv: Vec<String>) -> i32 {
         "repro" => cmd_repro(&args),
         "run" => cmd_run(&args),
         "fuzz" => cmd_fuzz(&args),
+        "bench" => bench::cmd_bench(&args),
         "compile" => cmd_compile(&args),
         "lsq-sweep" => cmd_lsq_sweep(&args),
         "list" => {
@@ -83,34 +91,57 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
     }
     let mut cfg = crate::sim::MachineConfig::default();
     apply_watchdog_knobs(&mut cfg, args);
-    let out = crate::fault::fuzz_kernel(
-        kernel,
-        seed,
-        plans,
-        &archs,
-        &cfg,
-        args.has_flag("verbose"),
-    )?;
-    let arch_names: Vec<&str> = out.archs.iter().map(|a| a.name()).collect();
-    if out.ok() {
-        println!(
-            "fuzz: {} plan(s) x [{}] on {} — no divergence from reference (seed {seed})",
-            out.plans,
-            arch_names.join(","),
-            out.kernel
-        );
-        Ok(())
+    // `--kernel all` sweeps every paper kernel plus a nested-if
+    // workload, so timing perturbations are differentially checked on
+    // every control-flow shape the suite exercises.
+    let kernels: Vec<String> = if kernel == "all" {
+        let mut ks: Vec<String> =
+            crate::workloads::PAPER_KERNELS.iter().map(|s| s.to_string()).collect();
+        ks.push("nested3".to_string());
+        ks
     } else {
-        for f in &out.failures {
-            eprintln!("{f}");
+        vec![kernel.to_string()]
+    };
+    let mut diverged = 0usize;
+    let mut cells = 0usize;
+    for kernel in &kernels {
+        let out = crate::fault::fuzz_kernel(
+            kernel,
+            seed,
+            plans,
+            &archs,
+            &cfg,
+            args.has_flag("verbose"),
+        )?;
+        let arch_names: Vec<&str> = out.archs.iter().map(|a| a.name()).collect();
+        cells += out.plans as usize * out.archs.len();
+        if out.ok() {
+            println!(
+                "fuzz: {} plan(s) x [{}] on {} — no divergence from reference (seed {seed})",
+                out.plans,
+                arch_names.join(","),
+                out.kernel
+            );
+        } else {
+            for f in &out.failures {
+                eprintln!("{f}");
+            }
+            eprintln!(
+                "fuzz: {}/{} plan x arch cell(s) diverged on {}",
+                out.failures.len(),
+                out.plans as usize * out.archs.len(),
+                out.kernel
+            );
+            diverged += out.failures.len();
         }
+    }
+    if diverged > 0 {
         anyhow::bail!(
-            "fuzz: {}/{} plan x arch cell(s) diverged on {}",
-            out.failures.len(),
-            out.plans as usize * out.archs.len(),
-            out.kernel
+            "fuzz: {diverged}/{cells} plan x arch cell(s) diverged across {} kernel(s)",
+            kernels.len()
         )
     }
+    Ok(())
 }
 
 fn cmd_repro(args: &Args) -> anyhow::Result<()> {

@@ -31,6 +31,33 @@
 //!   XLA dependency.
 //! - [`util`] — PRNG, mini CLI, bench + property-test harnesses (the
 //!   offline build has no clap/criterion/proptest).
+//!
+//! # Performance
+//!
+//! The simulator hot path is interpreter-free by construction:
+//!
+//! - **Pre-decoded IR** ([`sim::decoded`]): `transform::build` lowers
+//!   each function once into a flat [`sim::decoded::DecodedFn`] —
+//!   contiguous instruction stream with operand value-slots resolved to
+//!   indices, branch targets as block indices, and per-(predecessor,
+//!   block) φ-assignment tables — carried on
+//!   [`transform::Compiled`], so `simulate` never touches the IR.
+//! - **Dense channel ids**: every DAE channel is interned to a `u32` at
+//!   decode time ([`sim::decoded::ChanTable`]); the machine's channel
+//!   state and per-mem statistics are plain vectors, with no hash-map
+//!   lookups per push/pop.
+//! - **Wake-list scheduler**: blocked units and LSQs register the
+//!   channel event they wait on (push or pop); each scheduler round
+//!   steps only woken entities, in a fixed deterministic order, so idle
+//!   polling disappears while cycles, memory and commit order stay
+//!   bit-identical (pinned by the `determinism` integration test and
+//!   the fault-fuzz differential harness).
+//!
+//! Measure with `dae-spec bench` (writes `BENCH_sim.json`); compare
+//! against a saved run with
+//! `dae-spec bench --baseline BENCH_sim.json --max-regress 10`, which
+//! fails if any kernel × arch cell's best time regresses by more than
+//! the given percentage.
 
 pub mod analysis;
 pub mod area;

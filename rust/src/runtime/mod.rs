@@ -10,6 +10,7 @@
 
 pub mod client;
 pub mod vector_spec;
+pub mod xla_stub;
 
 pub use client::{artifacts_dir, Executable, PjrtRuntime};
 pub use vector_spec::{VectorSpecEngine, VectorSpecStats};

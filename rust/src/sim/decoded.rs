@@ -1,0 +1,473 @@
+//! Compile-time pre-decode of IR functions for the simulator hot path.
+//!
+//! The machine used to walk `Vec<InstrId>` per block, hash channel `Key`s
+//! on every push/pop and linearly scan φ `incomings` on every block entry.
+//! This module flattens all of that once, at `transform::build` time:
+//!
+//! - [`DecodedFn`] — a contiguous instruction stream per block with
+//!   operand *slots* (`u32` indices into the unit's value file), branch
+//!   targets as block indices, and per-predecessor φ-assignment tables so
+//!   block entry is a table walk instead of an `incomings` scan.
+//! - [`ChanTable`] — every channel the program can touch interned to a
+//!   dense `u32` id (the simulator's `Channels` is a `Vec`, not a hash
+//!   map), with per-array request/store-value ids and per-static-op
+//!   load-value ids resolved into the instruction stream.
+//!
+//! Decode is deliberately *lenient* about malformed blocks: the verifier
+//! skips unreachable blocks entirely (they may be unterminated or have
+//! ill-formed φs), so such blocks decode to runtime traps ([`DTerm::
+//! Unterminated`], [`DOp::PhiTrap`], missing φ tables) that only fire if
+//! the block is actually executed — exactly matching the interpreter-style
+//! engine this replaces.
+
+use crate::ir::{BinOp, ChanKind, CmpOp, Function, Module, Op, Terminator};
+use anyhow::{anyhow, Result};
+
+/// Sentinel destination slot for ops without a result value.
+pub const NO_DEST: u32 = u32::MAX;
+/// Sentinel channel id ("no such channel registered").
+pub const NO_CHAN: u32 = u32::MAX;
+
+/// Channel role, mirroring the machine's former `Key` enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DChanKind {
+    /// AGU → DU request stream (per array; loads + stores interleaved).
+    Req,
+    /// CU → DU store-value stream (per array — the ordering problem).
+    StVal,
+    /// DU → CU load-value sub-stream (per static op).
+    LdVal,
+    /// DU → AGU load-value sub-stream (per static op).
+    LdValAgu,
+}
+
+/// Metadata for one interned channel (diagnostics + routing).
+#[derive(Clone, Copy, Debug)]
+pub struct ChanMeta {
+    pub kind: DChanKind,
+    /// Index into `Module::arrays`.
+    pub arr: u32,
+    /// Static memory-op tag (meaningful for `LdVal`/`LdValAgu` only).
+    pub mem: u32,
+}
+
+/// Dense channel registry: every channel id the compiled program can
+/// touch, interned at decode time.
+#[derive(Clone, Debug, Default)]
+pub struct ChanTable {
+    pub metas: Vec<ChanMeta>,
+    /// `Req` channel id per array (always allocated).
+    pub req_of_arr: Vec<u32>,
+    /// `StVal` channel id per array (always allocated).
+    pub stval_of_arr: Vec<u32>,
+    ldval: Vec<u32>,
+    ldval_agu: Vec<u32>,
+}
+
+impl ChanTable {
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+
+    /// Number of static memory-op tags (`mem` ids) in the program.
+    pub fn n_mems(&self) -> usize {
+        self.ldval.len()
+    }
+
+    /// DU → CU value channel for static op `mem`, if the CU consumes it.
+    #[inline]
+    pub fn ldval_of_mem(&self, mem: u32) -> Option<u32> {
+        match self.ldval.get(mem as usize) {
+            Some(&id) if id != NO_CHAN => Some(id),
+            _ => None,
+        }
+    }
+
+    /// DU → AGU value channel for static op `mem`, if the AGU consumes it.
+    #[inline]
+    pub fn ldval_agu_of_mem(&self, mem: u32) -> Option<u32> {
+        match self.ldval_agu.get(mem as usize) {
+            Some(&id) if id != NO_CHAN => Some(id),
+            _ => None,
+        }
+    }
+
+    fn alloc(&mut self, kind: DChanKind, arr: u32, mem: u32) -> u32 {
+        let id = self.metas.len() as u32;
+        self.metas.push(ChanMeta { kind, arr, mem });
+        id
+    }
+}
+
+/// A pre-decoded operation. Operands are `u32` slots into the unit's
+/// value file; channels are dense [`ChanTable`] ids.
+#[derive(Clone, Copy, Debug)]
+pub enum DOp {
+    ConstI(i64),
+    ConstF(f64),
+    ConstB(bool),
+    IBin(BinOp, u32, u32),
+    FBin(BinOp, u32, u32),
+    ICmp(CmpOp, u32, u32),
+    FCmp(CmpOp, u32, u32),
+    Not(u32),
+    Select { cond: u32, t: u32, f: u32 },
+    IToF(u32),
+    FToI(u32),
+    /// STA-only direct memory access.
+    Load { arr: u32, idx: u32 },
+    /// STA-only direct memory access.
+    Store { arr: u32, idx: u32, val: u32 },
+    /// `send_ld_addr` / `send_st_addr` onto the array's request stream.
+    Send { chan: u32, mem: u32, idx: u32, is_store: bool },
+    Consume { chan: u32, mem: u32 },
+    Produce { chan: u32, mem: u32, val: u32 },
+    Poison { chan: u32, mem: u32, pred: Option<u32> },
+    /// A φ past the leading φ group — malformed, but only an error if it
+    /// is actually executed (the verifier skips unreachable blocks).
+    PhiTrap,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DInstr {
+    pub op: DOp,
+    /// Destination slot, or [`NO_DEST`].
+    pub dest: u32,
+}
+
+/// Pre-decoded terminator with resolved block indices.
+#[derive(Clone, Copy, Debug)]
+pub enum DTerm {
+    Br(u32),
+    CondBr { cond: u32, t: u32, f: u32 },
+    Ret,
+    /// Runtime trap: executing this reproduces the engine's
+    /// "unterminated block" error.
+    Unterminated,
+}
+
+/// φ assignments for one predecessor of a block.
+#[derive(Clone, Debug)]
+pub struct PhiTable {
+    /// Block index of the predecessor.
+    pub pred: u32,
+    /// `(dest slot, source slot)` per φ, in φ order. `None` marks a
+    /// pred for which some φ has no incoming (ill-formed unreachable
+    /// block) — entering from it raises the old runtime error.
+    pub assigns: Option<Vec<(u32, u32)>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DBlock {
+    /// Per-predecessor φ tables (empty when the block has no φs).
+    pub phis: Vec<PhiTable>,
+    /// Whether the block has any leading φs (distinguishes "no φs" from
+    /// "φs with no recorded predecessor").
+    pub has_phis: bool,
+    /// Non-φ instructions in execution order.
+    pub instrs: Vec<DInstr>,
+    pub term: DTerm,
+}
+
+/// A flattened function: 1:1 with `Function::blocks`, all ids resolved.
+#[derive(Clone, Debug)]
+pub struct DecodedFn {
+    pub name: String,
+    /// Value slots of the parameters, in order.
+    pub params: Vec<u32>,
+    /// Size of the value file.
+    pub nvals: usize,
+    pub entry: u32,
+    pub blocks: Vec<DBlock>,
+}
+
+/// Everything the simulator needs, pre-decoded: the unit functions
+/// (`[sta]` or `[agu, cu]`) plus the shared channel registry.
+#[derive(Clone, Debug)]
+pub struct DecodedSim {
+    pub fns: Vec<DecodedFn>,
+    pub chans: ChanTable,
+}
+
+/// Decode `m.funcs[i]` for each `i` in `fn_idxs` (pass `[0]` for a
+/// monolithic build, `[agu, cu]` for a decoupled one) and intern every
+/// channel the functions can touch.
+pub fn decode_fns(m: &Module, fn_idxs: &[usize]) -> Result<DecodedSim> {
+    let fns: Vec<&Function> = fn_idxs.iter().map(|&i| &m.funcs[i]).collect();
+    let chans = build_chan_table(m, &fns);
+    let mut dfns = Vec::with_capacity(fns.len());
+    for f in &fns {
+        dfns.push(decode_fn(m, f, &chans)?);
+    }
+    Ok(DecodedSim { fns: dfns, chans })
+}
+
+/// Intern the channel space. `Req`/`StVal` exist for every array (their
+/// FIFOs start empty, so over-allocating is observationally neutral);
+/// `LdVal`/`LdValAgu` are allocated per `consume_val` site, which makes
+/// "channel registered" exactly equivalent to the old
+/// `cu_consumes`/`agu_consumes` membership checks the DU routed by.
+fn build_chan_table(m: &Module, fns: &[&Function]) -> ChanTable {
+    let mut t = ChanTable::default();
+    for ai in 0..m.arrays.len() {
+        let id = t.alloc(DChanKind::Req, ai as u32, 0);
+        t.req_of_arr.push(id);
+        let id = t.alloc(DChanKind::StVal, ai as u32, 0);
+        t.stval_of_arr.push(id);
+    }
+    let mut n_mems = 0usize;
+    for f in fns {
+        for b in &f.blocks {
+            for &iid in &b.instrs {
+                let mem = match &f.instr(iid).op {
+                    Op::SendLdAddr { mem, .. }
+                    | Op::SendStAddr { mem, .. }
+                    | Op::ConsumeVal { mem, .. }
+                    | Op::ProduceVal { mem, .. }
+                    | Op::PoisonVal { mem, .. } => *mem,
+                    _ => continue,
+                };
+                n_mems = n_mems.max(mem as usize + 1);
+            }
+        }
+    }
+    t.ldval = vec![NO_CHAN; n_mems];
+    t.ldval_agu = vec![NO_CHAN; n_mems];
+    for f in fns {
+        for b in &f.blocks {
+            for &iid in &b.instrs {
+                if let Op::ConsumeVal { chan, mem, .. } = &f.instr(iid).op {
+                    let arr = m.chan(*chan).arr.0;
+                    let agu = matches!(m.chan(*chan).kind, ChanKind::LdValAgu);
+                    let mi = *mem as usize;
+                    let cur = if agu { t.ldval_agu[mi] } else { t.ldval[mi] };
+                    if cur == NO_CHAN {
+                        let kind = if agu { DChanKind::LdValAgu } else { DChanKind::LdVal };
+                        let id = t.alloc(kind, arr, *mem);
+                        if agu {
+                            t.ldval_agu[mi] = id;
+                        } else {
+                            t.ldval[mi] = id;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    t
+}
+
+fn decode_fn(m: &Module, f: &Function, tbl: &ChanTable) -> Result<DecodedFn> {
+    let mut blocks = Vec::with_capacity(f.blocks.len());
+    for b in &f.blocks {
+        // Leading φ group.
+        let nphi = b
+            .instrs
+            .iter()
+            .take_while(|&&iid| matches!(f.instr(iid).op, Op::Phi { .. }))
+            .count();
+
+        // Predecessor order: first appearance across the φ incomings.
+        // (The engine only ever *indexes* by pred, so order is free; we
+        // keep it deterministic for reproducible Debug output.)
+        let mut pred_order: Vec<u32> = Vec::new();
+        for &iid in &b.instrs[..nphi] {
+            if let Op::Phi { incomings, .. } = &f.instr(iid).op {
+                for (bb, _) in incomings {
+                    if !pred_order.contains(&bb.0) {
+                        pred_order.push(bb.0);
+                    }
+                }
+            }
+        }
+        let mut phis: Vec<PhiTable> = Vec::with_capacity(pred_order.len());
+        for &p in &pred_order {
+            let mut assigns = Some(Vec::with_capacity(nphi));
+            for &iid in &b.instrs[..nphi] {
+                let instr = f.instr(iid);
+                let Op::Phi { incomings, .. } = &instr.op else { unreachable!() };
+                match incomings.iter().find(|(bb, _)| bb.0 == p) {
+                    Some((_, v)) => {
+                        if let Some(a) = assigns.as_mut() {
+                            let dest = instr
+                                .result
+                                .ok_or_else(|| anyhow!("φ without result in @{}", f.name))?;
+                            a.push((dest.0, v.0));
+                        }
+                    }
+                    // Some φ lacks this pred: the table is unusable from
+                    // that edge; only an error if dynamically taken.
+                    None => assigns = None,
+                }
+            }
+            phis.push(PhiTable { pred: p, assigns });
+        }
+
+        let mut instrs = Vec::with_capacity(b.instrs.len() - nphi);
+        for &iid in &b.instrs[nphi..] {
+            let instr = f.instr(iid);
+            let dest = instr.result.map(|r| r.0).unwrap_or(NO_DEST);
+            let op = match &instr.op {
+                Op::Phi { .. } => DOp::PhiTrap,
+                Op::ConstI(x) => DOp::ConstI(*x),
+                Op::ConstF(x) => DOp::ConstF(*x),
+                Op::ConstB(x) => DOp::ConstB(*x),
+                Op::IBin(o, a, b) => DOp::IBin(*o, a.0, b.0),
+                Op::FBin(o, a, b) => DOp::FBin(*o, a.0, b.0),
+                Op::ICmp(o, a, b) => DOp::ICmp(*o, a.0, b.0),
+                Op::FCmp(o, a, b) => DOp::FCmp(*o, a.0, b.0),
+                Op::Not(a) => DOp::Not(a.0),
+                Op::Select { cond, t, f: fv, .. } => {
+                    DOp::Select { cond: cond.0, t: t.0, f: fv.0 }
+                }
+                Op::IToF(a) => DOp::IToF(a.0),
+                Op::FToI(a) => DOp::FToI(a.0),
+                Op::Load { arr, idx, .. } => DOp::Load { arr: arr.0, idx: idx.0 },
+                Op::Store { arr, idx, val } => {
+                    DOp::Store { arr: arr.0, idx: idx.0, val: val.0 }
+                }
+                Op::SendLdAddr { chan, mem, idx } => DOp::Send {
+                    chan: tbl.req_of_arr[m.chan(*chan).arr.index()],
+                    mem: *mem,
+                    idx: idx.0,
+                    is_store: false,
+                },
+                Op::SendStAddr { chan, mem, idx } => DOp::Send {
+                    chan: tbl.req_of_arr[m.chan(*chan).arr.index()],
+                    mem: *mem,
+                    idx: idx.0,
+                    is_store: true,
+                },
+                Op::ConsumeVal { chan, mem, .. } => {
+                    let id = match m.chan(*chan).kind {
+                        ChanKind::LdValAgu => tbl.ldval_agu_of_mem(*mem),
+                        _ => tbl.ldval_of_mem(*mem),
+                    }
+                    .ok_or_else(|| {
+                        anyhow!("decode: unregistered consume of m{} in @{}", mem, f.name)
+                    })?;
+                    DOp::Consume { chan: id, mem: *mem }
+                }
+                Op::ProduceVal { chan, mem, val } => DOp::Produce {
+                    chan: tbl.stval_of_arr[m.chan(*chan).arr.index()],
+                    mem: *mem,
+                    val: val.0,
+                },
+                Op::PoisonVal { chan, mem, pred } => DOp::Poison {
+                    chan: tbl.stval_of_arr[m.chan(*chan).arr.index()],
+                    mem: *mem,
+                    pred: pred.map(|p| p.0),
+                },
+            };
+            instrs.push(DInstr { op, dest });
+        }
+
+        let term = match &b.term {
+            Terminator::Br(t) => DTerm::Br(t.0),
+            Terminator::CondBr { cond, t, f: fb } => {
+                DTerm::CondBr { cond: cond.0, t: t.0, f: fb.0 }
+            }
+            Terminator::Ret => DTerm::Ret,
+            Terminator::Unterminated => DTerm::Unterminated,
+        };
+        blocks.push(DBlock { phis, has_phis: nphi > 0, instrs, term });
+    }
+    Ok(DecodedFn {
+        name: f.name.clone(),
+        params: f.params.iter().map(|p| p.0).collect(),
+        nvals: f.values.len(),
+        entry: f.entry.0,
+        blocks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+    use crate::transform::{build, Arch, Compiled};
+
+    const SRC: &str = r#"
+array @A : i64[64]
+array @idx : i64[64]
+
+func @fig1c(%n: i64) {
+entry:
+  %c0 = const.i 0
+  br header
+header:
+  %i = phi i64 [entry: %c0], [latch: %inext]
+  %cc = icmp.lt %i, %n
+  condbr %cc, body, exit
+body:
+  %a = load @A[%i]
+  %zero = const.i 0
+  %p = icmp.gt %a, %zero
+  condbr %p, then, latch
+then:
+  %w = load @idx[%i]
+  %aw = load @A[%w]
+  %c1 = const.i 1
+  %fv = add.i %aw, %c1
+  store @A[%w], %fv
+  br latch
+latch:
+  %c1b = const.i 1
+  %inext = add.i %i, %c1b
+  br header
+exit:
+  ret
+}
+"#;
+
+    #[test]
+    fn decodes_monolithic_with_phi_tables() {
+        let m = parse_module(SRC).unwrap();
+        let d = decode_fns(&m, &[0]).unwrap();
+        let f = &d.fns[0];
+        assert_eq!(f.blocks.len(), m.funcs[0].blocks.len());
+        assert_eq!(f.nvals, m.funcs[0].values.len());
+        // block 1 is `header`: one φ with two incoming preds
+        let header = &f.blocks[1];
+        assert!(header.has_phis);
+        assert_eq!(header.phis.len(), 2);
+        for pt in &header.phis {
+            assert_eq!(pt.assigns.as_ref().unwrap().len(), 1);
+        }
+        // non-φ streams skip the φs
+        assert!(header.instrs.iter().all(|i| !matches!(i.op, DOp::PhiTrap)));
+        // per-array Req/StVal always interned
+        assert_eq!(d.chans.req_of_arr.len(), m.arrays.len());
+        assert_eq!(d.chans.stval_of_arr.len(), m.arrays.len());
+    }
+
+    #[test]
+    fn dense_ids_match_consume_sets() {
+        let m = parse_module(SRC).unwrap();
+        for arch in [Arch::Dae, Arch::Spec] {
+            let c = build(&m, 0, arch).unwrap();
+            let Compiled::Dae { program, decoded, .. } = &c else { panic!() };
+            for mo in &program.mem_ops {
+                if mo.is_store {
+                    continue;
+                }
+                assert_eq!(
+                    decoded.chans.ldval_of_mem(mo.mem).is_some(),
+                    program.cu_consumes.contains(&mo.mem),
+                    "{arch:?} m{} CU routing",
+                    mo.mem
+                );
+                assert_eq!(
+                    decoded.chans.ldval_agu_of_mem(mo.mem).is_some(),
+                    program.agu_consumes.contains(&mo.mem),
+                    "{arch:?} m{} AGU routing",
+                    mo.mem
+                );
+            }
+        }
+    }
+}

@@ -1,17 +1,26 @@
 //! The DAE machine: functional co-simulation of AGU + DU + CU (or the
 //! single STA unit) with timestamp-dataflow timing. See `sim/mod.rs` for
 //! the model description.
+//!
+//! Hot-path layout (see [`super::decoded`]): units execute pre-decoded
+//! instruction streams ([`DecodedFn`]) over a dense channel vector
+//! indexed by [`ChanTable`] ids, and the decoupled scheduler is a
+//! wake-list — a blocked unit or LSQ registers the channel event it
+//! waits on and is only re-stepped when that event fires, in a fixed
+//! deterministic order. Timing is unaffected: timestamps are computed
+//! from data dependencies, never from host scheduling order.
 
+use super::decoded::{ChanTable, DBlock, DChanKind, DOp, DTerm, DecodedFn, NO_DEST};
 use super::interp::{clamp_idx, eval_fbin, eval_fcmp, eval_ibin, eval_icmp};
 use super::stall::{ChannelStat, LsqStat, StallDiagnostic, StallReason, UnitStat};
 use super::trace::Trace;
 use super::{MachineConfig, Memory};
 use crate::fault::FaultInjector;
 use crate::ir::types::Val;
-use crate::ir::{ArrayId, BlockId, ChanKind, Function, Module, Op, Terminator};
+use crate::ir::{BinOp, Module};
 use crate::transform::{Arch, Compiled};
-use anyhow::{anyhow, bail, Result};
 use crate::util::FxHashMap;
+use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -38,18 +47,6 @@ pub struct SimResult {
 // channels
 // ---------------------------------------------------------------------------
 
-#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
-enum Key {
-    /// AGU → DU request stream (per array; loads + stores interleaved).
-    Req(ArrayId),
-    /// CU → DU store-value stream (per array — the ordering problem).
-    StVal(ArrayId),
-    /// DU → CU load-value sub-stream (per static op).
-    LdVal(ArrayId, u32),
-    /// DU → AGU load-value sub-stream (per static op).
-    LdValAgu(ArrayId, u32),
-}
-
 #[derive(Clone, Copy, Debug)]
 struct Elem {
     val: Val,
@@ -60,48 +57,114 @@ struct Elem {
     t: u64,
 }
 
+/// What a blocked entity is waiting for on a channel.
+#[derive(Clone, Copy, Debug)]
+struct Wait {
+    chan: u32,
+    /// `true`: producer blocked on a full FIFO, needs a pop to free
+    /// space. `false`: consumer blocked on an empty FIFO, needs a push.
+    needs_pop: bool,
+}
+
 #[derive(Default)]
 struct Chan {
     q: VecDeque<Elem>,
     last_push: u64,
     last_pop: u64,
+    /// Entity bits to wake when an element is pushed.
+    wake_on_push: u64,
+    /// Entity bits to wake when an element is popped.
+    wake_on_pop: u64,
 }
 
-#[derive(Default)]
+/// Dense channel state, indexed by [`ChanTable`] id. Accumulates a wake
+/// mask the scheduler drains after each entity step.
 struct Channels {
-    map: FxHashMap<Key, Chan>,
+    chans: Vec<Chan>,
+    /// Functional FIFO capacity (0 = unbounded). Blocks producers only;
+    /// timestamps are data-driven and unaffected.
+    cap: usize,
+    woken: u64,
 }
 
 impl Channels {
-    fn push(&mut self, key: Key, mut e: Elem, lat: u64) {
-        let c = self.map.entry(key).or_default();
+    fn new(n: usize, cap: usize) -> Self {
+        Channels { chans: (0..n).map(|_| Chan::default()).collect(), cap, woken: 0 }
+    }
+
+    #[inline]
+    fn full(&self, id: u32) -> bool {
+        self.cap != 0 && self.chans[id as usize].q.len() >= self.cap
+    }
+
+    /// Unconditional push (caller has checked capacity).
+    fn push(&mut self, id: u32, mut e: Elem, lat: u64) {
+        let c = &mut self.chans[id as usize];
         // 1 element/cycle on each stream
         let t_op = e.t.max(c.last_push + 1);
         c.last_push = t_op;
         e.t = t_op + lat;
         c.q.push_back(e);
+        let w = std::mem::take(&mut c.wake_on_push);
+        self.woken |= w;
     }
 
-    fn front(&self, key: Key) -> Option<&Elem> {
-        self.map.get(&key).and_then(|c| c.q.front())
+    /// Capacity-checked push; `false` means the FIFO is full and the
+    /// producer must block.
+    fn try_push(&mut self, id: u32, e: Elem, lat: u64) -> bool {
+        if self.full(id) {
+            return false;
+        }
+        self.push(id, e, lat);
+        true
+    }
+
+    fn front(&self, id: u32) -> Option<&Elem> {
+        self.chans[id as usize].q.front()
     }
 
     /// Pop the raw element (admission path — no pop-rate accounting; the
     /// LSQ's in-order admission chain models that).
-    fn pop_elem(&mut self, key: Key) -> Option<Elem> {
-        self.map.get_mut(&key)?.q.pop_front()
+    fn pop_elem(&mut self, id: u32) -> Option<Elem> {
+        let c = &mut self.chans[id as usize];
+        let e = c.q.pop_front()?;
+        let w = std::mem::take(&mut c.wake_on_pop);
+        self.woken |= w;
+        Some(e)
     }
 
-    fn pop(&mut self, key: Key, t_ctrl: u64) -> Option<(Val, bool, u32, u64)> {
-        let c = self.map.get_mut(&key)?;
+    fn pop(&mut self, id: u32, t_ctrl: u64) -> Option<(Val, bool, u32, u64)> {
+        let c = &mut self.chans[id as usize];
         let e = c.q.pop_front()?;
         let t = e.t.max(t_ctrl).max(c.last_pop + 1);
         c.last_pop = t;
+        let w = std::mem::take(&mut c.wake_on_pop);
+        self.woken |= w;
         Some((e.val, e.poison, e.mem, t))
     }
 
     fn all_empty(&self) -> bool {
-        self.map.values().all(|c| c.q.is_empty())
+        self.chans.iter().all(|c| c.q.is_empty())
+    }
+
+    fn wait_for_push(&mut self, id: u32, bit: u64) {
+        self.chans[id as usize].wake_on_push |= bit;
+    }
+
+    fn wait_for_pop(&mut self, id: u32, bit: u64) {
+        self.chans[id as usize].wake_on_pop |= bit;
+    }
+
+    fn register(&mut self, w: Wait, bit: u64) {
+        if w.needs_pop {
+            self.wait_for_pop(w.chan, bit);
+        } else {
+            self.wait_for_push(w.chan, bit);
+        }
+    }
+
+    fn take_woken(&mut self) -> u64 {
+        std::mem::take(&mut self.woken)
     }
 }
 
@@ -121,7 +184,7 @@ struct WinEntry {
 
 /// Per-static-op load-value reorder buffer (ring indexed by
 /// `seq - next_release`; the window bounds its size).
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct Rob {
     next_admit: u64,
     next_release: u64,
@@ -139,46 +202,62 @@ impl Rob {
         self.done[idx] = Some(v);
     }
 
+    /// The next in-order value, if it has executed (not yet released).
     #[inline]
-    fn pop_ready(&mut self) -> Option<(Val, u64)> {
-        match self.done.front() {
-            Some(Some(_)) => {
-                self.next_release += 1;
-                self.done.pop_front().flatten()
-            }
-            _ => None,
-        }
+    fn peek_ready(&self) -> Option<(Val, u64)> {
+        self.done.front().copied().flatten()
+    }
+
+    #[inline]
+    fn release(&mut self) {
+        self.next_release += 1;
+        self.done.pop_front();
     }
 }
 
 struct Lsq {
-    arr: ArrayId,
+    /// Index into `Module::arrays`.
+    arr: u32,
+    /// Scheduler entity bit of this LSQ.
+    bit: u64,
+    /// Dense id of this array's request stream.
+    req_ch: u32,
+    /// Dense id of this array's store-value stream.
+    stval_ch: u32,
     /// LSQ window: admitted, unresolved requests in order.
     window: VecDeque<WinEntry>,
-    /// Load-value reorder buffers, one per static load op.
-    robs: FxHashMap<u32, Rob>,
+    /// Load-value reorder buffers, indexed by static-op id.
+    robs: Vec<Rob>,
+    /// Static ops with a ready ROB head whose delivery is blocked on a
+    /// full value channel (functional backpressure) — retried first.
+    pending: Vec<u32>,
     /// In-order admission time of the last request.
     t_enter_last: u64,
     /// Resolve times of allocated store entries (ring of ≤ st_q).
     store_slots: VecDeque<u64>,
     /// Completion times of in-flight loads (ring of ≤ ld_q).
     load_slots: VecDeque<u64>,
-    /// Last commit time per address (RAW forwarding horizon).
-    commit_at: FxHashMap<i64, u64>,
+    /// Last commit time per address (RAW forwarding horizon), dense over
+    /// the array.
+    commit_at: Vec<u64>,
     read_port: u64,
     write_port: u64,
 }
 
 impl Lsq {
-    fn new(arr: ArrayId) -> Self {
+    fn new(arr: u32, bit: u64, tbl: &ChanTable, arr_len: usize) -> Self {
         Lsq {
             arr,
+            bit,
+            req_ch: tbl.req_of_arr[arr as usize],
+            stval_ch: tbl.stval_of_arr[arr as usize],
             window: VecDeque::new(),
-            robs: FxHashMap::default(),
+            robs: vec![Rob::default(); tbl.n_mems()],
+            pending: Vec::new(),
             t_enter_last: 0,
             store_slots: VecDeque::new(),
             load_slots: VecDeque::new(),
-            commit_at: FxHashMap::default(),
+            commit_at: vec![0; arr_len],
             read_port: 0,
             write_port: 0,
         }
@@ -200,11 +279,11 @@ enum UnitKind {
 struct Unit<'a> {
     kind: UnitKind,
     name: &'static str,
-    f: &'a Function,
+    f: &'a DecodedFn,
     env: Vec<Option<Val>>,
     tval: Vec<u64>,
-    cur: BlockId,
-    prev: Option<BlockId>,
+    cur: u32,
+    prev: Option<u32>,
     /// Next instruction index within the current block (φs handled on
     /// entry).
     pc: usize,
@@ -212,32 +291,34 @@ struct Unit<'a> {
     t_ctrl: u64,
     done: bool,
     dyn_instrs: u64,
-    // STA-only memory timing state
-    sta_store_commit: FxHashMap<ArrayId, u64>,
-    sta_read_port: FxHashMap<ArrayId, u64>,
-    sta_write_port: FxHashMap<ArrayId, u64>,
+    /// Scratch for atomic φ application on block entry.
+    phi_buf: Vec<(u32, Val, u64)>,
+    // STA-only memory timing state, dense per array
+    sta_store_commit: Vec<u64>,
+    sta_read_port: Vec<u64>,
+    sta_write_port: Vec<u64>,
 }
 
 enum StepOut {
     /// Made progress; call again.
     Progress,
-    /// Waiting on a channel pop.
-    Blocked,
+    /// Waiting on a channel event.
+    Blocked(Wait),
     Done,
 }
 
 struct SimCtx<'a> {
     m: &'a Module,
+    tbl: &'a ChanTable,
     cfg: &'a MachineConfig,
     chans: Channels,
     memory: Memory,
     max_t: u64,
-    agu_consumes: Vec<u32>,
-    cu_consumes: Vec<u32>,
     trace: Option<Trace>,
     stores_committed: u64,
     stores_poisoned: u64,
-    per_mem: FxHashMap<u32, (u64, u64)>,
+    /// Per static op (dense by mem id): (requests, poisons).
+    per_mem: Vec<(u64, u64)>,
     commit_log: Vec<(u32, i64, Val)>,
     /// Cooperative wall-clock deadline (from `cfg.wall_timeout_ms`).
     deadline: Option<Instant>,
@@ -281,12 +362,14 @@ impl SimCtx<'_> {
         matches!(self.deadline, Some(d) if Instant::now() >= d)
     }
 
-    fn key_name(&self, k: &Key) -> String {
-        match k {
-            Key::Req(a) => format!("req(@{})", self.m.array(*a).name),
-            Key::StVal(a) => format!("stval(@{})", self.m.array(*a).name),
-            Key::LdVal(a, mem) => format!("ldval(@{},m{})", self.m.array(*a).name, mem),
-            Key::LdValAgu(a, mem) => format!("ldval_agu(@{},m{})", self.m.array(*a).name, mem),
+    fn chan_name(&self, id: usize) -> String {
+        let meta = &self.tbl.metas[id];
+        let an = &self.m.arrays[meta.arr as usize].name;
+        match meta.kind {
+            DChanKind::Req => format!("req(@{an})"),
+            DChanKind::StVal => format!("stval(@{an})"),
+            DChanKind::LdVal => format!("ldval(@{an},m{})", meta.mem),
+            DChanKind::LdValAgu => format!("ldval_agu(@{an},m{})", meta.mem),
         }
     }
 
@@ -294,11 +377,12 @@ impl SimCtx<'_> {
     fn chan_stats(&self) -> Vec<ChannelStat> {
         let mut v: Vec<ChannelStat> = self
             .chans
-            .map
+            .chans
             .iter()
+            .enumerate()
             .filter(|(_, c)| !c.q.is_empty())
-            .map(|(k, c)| ChannelStat {
-                name: self.key_name(k),
+            .map(|(id, c)| ChannelStat {
+                name: self.chan_name(id),
                 occupancy: c.q.len(),
                 last_push: c.last_push,
                 last_pop: c.last_pop,
@@ -329,17 +413,23 @@ fn deadline_from(cfg: &MachineConfig) -> Option<Instant> {
 }
 
 impl<'a> Unit<'a> {
-    fn new(kind: UnitKind, name: &'static str, f: &'a Function, args: &[Val]) -> Self {
-        let mut env = vec![None; f.values.len()];
+    fn new(
+        kind: UnitKind,
+        name: &'static str,
+        f: &'a DecodedFn,
+        args: &[Val],
+        n_arrays: usize,
+    ) -> Self {
+        let mut env = vec![None; f.nvals];
         for (i, &p) in f.params.iter().enumerate() {
-            env[p.index()] = Some(args[i]);
+            env[p as usize] = Some(args[i]);
         }
         Unit {
             kind,
             name,
             f,
             env,
-            tval: vec![0; f.values.len()],
+            tval: vec![0; f.nvals],
             cur: f.entry,
             prev: None,
             pc: 0,
@@ -347,9 +437,10 @@ impl<'a> Unit<'a> {
             t_ctrl: 0,
             done: false,
             dyn_instrs: 0,
-            sta_store_commit: FxHashMap::default(),
-            sta_read_port: FxHashMap::default(),
-            sta_write_port: FxHashMap::default(),
+            phi_buf: Vec::new(),
+            sta_store_commit: vec![0; n_arrays],
+            sta_read_port: vec![0; n_arrays],
+            sta_write_port: vec![0; n_arrays],
         }
     }
 
@@ -362,20 +453,45 @@ impl<'a> Unit<'a> {
         }
     }
 
-    /// Execute until blocked on a channel or done. Returns whether any
-    /// instruction was executed.
-    fn run(&mut self, ctx: &mut SimCtx) -> Result<bool> {
-        let mut any = false;
+    /// Execute until blocked on a channel event or done. Returns the wait
+    /// condition when blocked.
+    fn run(&mut self, ctx: &mut SimCtx) -> Result<Option<Wait>> {
         loop {
             match self.step(ctx)? {
-                StepOut::Progress => any = true,
-                StepOut::Blocked => return Ok(any),
+                StepOut::Progress => {}
+                StepOut::Blocked(w) => return Ok(Some(w)),
                 StepOut::Done => {
                     self.done = true;
-                    return Ok(any);
+                    return Ok(None);
                 }
             }
         }
+    }
+
+    /// Apply the pre-decoded φ table for entry into `block` from
+    /// `self.prev`. Reads all sources before writing (φs are atomic).
+    fn enter_phis(&mut self, block: &DBlock, fname: &str) -> Result<()> {
+        let prev = self.prev.ok_or_else(|| anyhow!("φ in entry block"))?;
+        let assigns = block
+            .phis
+            .iter()
+            .find(|p| p.pred == prev)
+            .and_then(|p| p.assigns.as_ref())
+            .ok_or_else(|| {
+                anyhow!("φ missing incoming for bb{prev} in bb{} of @{fname}", self.cur)
+            })?;
+        self.phi_buf.clear();
+        for &(dest, src) in assigns {
+            let val = self.env[src as usize]
+                .ok_or_else(|| anyhow!("φ operand undefined in @{fname}"))?;
+            let t = self.tval[src as usize].max(self.t_ctrl);
+            self.phi_buf.push((dest, val, t));
+        }
+        for &(dest, val, t) in &self.phi_buf {
+            self.env[dest as usize] = Some(val);
+            self.tval[dest as usize] = t;
+        }
+        Ok(())
     }
 
     fn step(&mut self, ctx: &mut SimCtx) -> Result<StepOut> {
@@ -383,43 +499,19 @@ impl<'a> Unit<'a> {
             return Ok(StepOut::Done);
         }
         let f = self.f;
-        let block = &f.blocks[self.cur.index()];
+        let block = &f.blocks[self.cur as usize];
 
         if !self.entered {
-            // φs evaluate atomically on entry
-            let mut updates: Vec<(usize, Val, u64)> = Vec::new();
-            for &iid in &block.instrs {
-                let instr = f.instr(iid);
-                if let Op::Phi { incomings, .. } = &instr.op {
-                    let pb = self.prev.ok_or_else(|| anyhow!("φ in entry block"))?;
-                    let (_, v) = incomings
-                        .iter()
-                        .find(|(bb, _)| *bb == pb)
-                        .ok_or_else(|| {
-                            anyhow!("φ missing incoming for {pb} in {} of @{}", block.name, f.name)
-                        })?;
-                    let val = self.env[v.index()]
-                        .ok_or_else(|| anyhow!("φ operand undefined in @{}", f.name))?;
-                    let t = self.tval[v.index()].max(self.t_ctrl);
-                    updates.push((instr.result.unwrap().index(), val, t));
-                } else {
-                    break;
-                }
+            if block.has_phis {
+                self.enter_phis(block, &f.name)?;
             }
-            self.pc = updates.len();
-            for (vi, val, t) in updates {
-                self.env[vi] = Some(val);
-                self.tval[vi] = t;
-            }
+            self.pc = 0;
             self.entered = true;
         }
 
         // straight-line execution from pc
         while self.pc < block.instrs.len() {
-            let iid = block.instrs[self.pc];
-            let instr = f.instr(iid);
-            self.dyn_instrs += 1;
-            if self.dyn_instrs > ctx.cfg.max_dyn_instrs {
+            if self.dyn_instrs >= ctx.cfg.max_dyn_instrs {
                 return Err(ctx
                     .stall_error(
                         StallReason::InstrBudget {
@@ -438,76 +530,81 @@ impl<'a> Unit<'a> {
                     vec![],
                 ));
             }
+            let instr = block.instrs[self.pc];
 
             macro_rules! get {
                 ($v:expr) => {
-                    self.env[$v.index()]
+                    self.env[$v as usize]
                         .ok_or_else(|| anyhow!("use of undefined value in @{}", f.name))?
                 };
             }
             macro_rules! tv {
                 ($v:expr) => {
-                    self.tval[$v.index()]
+                    self.tval[$v as usize]
                 };
             }
 
-            let (result, t_res): (Option<Val>, u64) = match &instr.op {
-                Op::Phi { .. } => bail!("φ after non-φ reached execution in @{}", f.name),
+            let (result, t_res): (Option<Val>, u64) = match instr.op {
+                DOp::PhiTrap => bail!("φ after non-φ reached execution in @{}", f.name),
                 // constants are hardwired — available at t=0
-                Op::ConstI(x) => (Some(Val::I(*x)), 0),
-                Op::ConstF(x) => (Some(Val::F(*x)), 0),
-                Op::ConstB(x) => (Some(Val::B(*x)), 0),
-                Op::IBin(o, a, b) => {
+                DOp::ConstI(x) => (Some(Val::I(x)), 0),
+                DOp::ConstF(x) => (Some(Val::F(x)), 0),
+                DOp::ConstB(x) => (Some(Val::B(x)), 0),
+                DOp::IBin(o, a, b) => {
                     let lat = match o {
-                        crate::ir::BinOp::Mul => ctx.cfg.mul_lat,
-                        crate::ir::BinOp::Div | crate::ir::BinOp::Rem => ctx.cfg.div_lat,
+                        BinOp::Mul => ctx.cfg.mul_lat,
+                        BinOp::Div | BinOp::Rem => ctx.cfg.div_lat,
                         _ => 1,
                     };
                     (
-                        Some(Val::I(eval_ibin(*o, get!(a).as_i(), get!(b).as_i()))),
+                        Some(Val::I(eval_ibin(o, get!(a).as_i(), get!(b).as_i()))),
                         tv!(a).max(tv!(b)) + lat,
                     )
                 }
-                Op::FBin(o, a, b) => {
+                DOp::FBin(o, a, b) => {
                     let lat = match o {
-                        crate::ir::BinOp::Mul => ctx.cfg.mul_lat,
-                        crate::ir::BinOp::Div | crate::ir::BinOp::Rem => ctx.cfg.div_lat,
+                        BinOp::Mul => ctx.cfg.mul_lat,
+                        BinOp::Div | BinOp::Rem => ctx.cfg.div_lat,
                         _ => 2,
                     };
                     (
-                        Some(Val::F(eval_fbin(*o, get!(a).as_f(), get!(b).as_f()))),
+                        Some(Val::F(eval_fbin(o, get!(a).as_f(), get!(b).as_f()))),
                         tv!(a).max(tv!(b)) + lat,
                     )
                 }
-                Op::ICmp(o, a, b) => (
-                    Some(Val::B(eval_icmp(*o, get!(a).as_i(), get!(b).as_i()))),
+                DOp::ICmp(o, a, b) => (
+                    Some(Val::B(eval_icmp(o, get!(a).as_i(), get!(b).as_i()))),
                     tv!(a).max(tv!(b)) + 1,
                 ),
-                Op::FCmp(o, a, b) => (
-                    Some(Val::B(eval_fcmp(*o, get!(a).as_f(), get!(b).as_f()))),
+                DOp::FCmp(o, a, b) => (
+                    Some(Val::B(eval_fcmp(o, get!(a).as_f(), get!(b).as_f()))),
                     tv!(a).max(tv!(b)) + 1,
                 ),
-                Op::Not(a) => (Some(Val::B(!get!(a).as_b())), tv!(a) + 1),
-                Op::Select { cond, t, f: fv, .. } => {
+                DOp::Not(a) => (Some(Val::B(!get!(a).as_b())), tv!(a) + 1),
+                DOp::Select { cond, t, f: fv } => {
                     let v = if get!(cond).as_b() { get!(t) } else { get!(fv) };
                     (Some(v), tv!(cond).max(tv!(t)).max(tv!(fv)) + 1)
                 }
-                Op::IToF(a) => (Some(Val::F(get!(a).as_i() as f64)), tv!(a) + 1),
-                Op::FToI(a) => (Some(Val::I(get!(a).as_f() as i64)), tv!(a) + 1),
+                DOp::IToF(a) => (Some(Val::F(get!(a).as_i() as f64)), tv!(a) + 1),
+                DOp::FToI(a) => (Some(Val::I(get!(a).as_f() as i64)), tv!(a) + 1),
 
-                Op::Load { arr, idx, .. } => {
+                DOp::Load { arr, idx } => {
                     // STA unit only
                     debug_assert!(self.kind == UnitKind::Sta);
                     let i = get!(idx).as_i();
-                    let a = &ctx.memory[arr.index()];
+                    let a = &ctx.memory[arr as usize];
                     if i < 0 || i as usize >= a.len() {
-                        bail!("STA load @{}[{}] out of bounds", ctx.m.array(*arr).name, i);
+                        bail!(
+                            "STA load @{}[{}] out of bounds",
+                            ctx.m.arrays[arr as usize].name,
+                            i
+                        );
                     }
                     let v = a[i as usize];
-                    let barrier = self.sta_store_commit.get(arr).copied().unwrap_or(0);
-                    let port = self.sta_read_port.entry(*arr).or_insert(0);
-                    let t_issue = tv!(idx).max(self.t_ctrl).max(barrier).max(*port);
-                    *port = t_issue + 1;
+                    let barrier = self.sta_store_commit[arr as usize];
+                    let port = self.sta_read_port[arr as usize];
+                    let t_issue = tv!(idx).max(self.t_ctrl).max(barrier).max(port);
+                    self.sta_read_port[arr as usize] = t_issue + 1;
                     let t_done = t_issue + ctx.read_lat(t_issue);
                     ctx.bump(t_done);
                     if let Some(tr) = &mut ctx.trace {
@@ -515,21 +612,25 @@ impl<'a> Unit<'a> {
                     }
                     (Some(v), t_done)
                 }
-                Op::Store { arr, idx, val } => {
+                DOp::Store { arr, idx, val } => {
                     debug_assert!(self.kind == UnitKind::Sta);
                     let i = get!(idx).as_i();
                     let v = get!(val);
-                    let alen = ctx.memory[arr.index()].len();
+                    let alen = ctx.memory[arr as usize].len();
                     if i < 0 || i as usize >= alen {
-                        bail!("STA store @{}[{}] out of bounds", ctx.m.array(*arr).name, i);
+                        bail!(
+                            "STA store @{}[{}] out of bounds",
+                            ctx.m.arrays[arr as usize].name,
+                            i
+                        );
                     }
-                    let port = self.sta_write_port.entry(*arr).or_insert(0);
-                    let t_w = tv!(idx).max(tv!(val)).max(self.t_ctrl).max(*port);
-                    *port = t_w + 1;
+                    let port = self.sta_write_port[arr as usize];
+                    let t_w = tv!(idx).max(tv!(val)).max(self.t_ctrl).max(port);
+                    self.sta_write_port[arr as usize] = t_w + 1;
                     let t_commit = t_w + ctx.write_lat(t_w);
-                    ctx.memory[arr.index()][i as usize] = v;
+                    ctx.memory[arr as usize][i as usize] = v;
                     ctx.commit_log.push((0, i, v));
-                    let e = self.sta_store_commit.entry(*arr).or_insert(0);
+                    let e = &mut self.sta_store_commit[arr as usize];
                     *e = (*e).max(t_commit);
                     ctx.stores_committed += 1;
                     ctx.bump(t_commit);
@@ -539,85 +640,67 @@ impl<'a> Unit<'a> {
                     (None, t_commit)
                 }
 
-                Op::SendLdAddr { chan, mem, idx } | Op::SendStAddr { chan, mem, idx } => {
-                    let is_store = matches!(instr.op, Op::SendStAddr { .. });
-                    let arr = ctx.m.chan(*chan).arr;
+                DOp::Send { chan, mem, idx, is_store } => {
                     let t = tv!(idx).max(self.t_ctrl);
                     let lat = ctx.push_lat(t);
-                    ctx.chans.push(
-                        Key::Req(arr),
-                        Elem { val: get!(idx), poison: false, mem: *mem, is_store, t },
-                        lat,
-                    );
+                    let e = Elem { val: get!(idx), poison: false, mem, is_store, t };
+                    if !ctx.chans.try_push(chan, e, lat) {
+                        return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
+                    }
                     ctx.bump(t);
                     if let Some(tr) = &mut ctx.trace {
-                        tr.push(self.name, if is_store { "send_st" } else { "send_ld" }, *mem, t);
+                        tr.push(self.name, if is_store { "send_st" } else { "send_ld" }, mem, t);
                     }
                     (None, t)
                 }
-                Op::ConsumeVal { chan, mem, .. } => {
-                    let arr = ctx.m.chan(*chan).arr;
-                    let key = match ctx.m.chan(*chan).kind {
-                        ChanKind::LdValAgu => Key::LdValAgu(arr, *mem),
-                        _ => Key::LdVal(arr, *mem),
-                    };
+                DOp::Consume { chan, mem } => {
                     // A stall-forever fault wedges the consume even though
                     // its operand has arrived (watchdog/deadlock testing).
-                    if let Some(front) = ctx.chans.front(key) {
+                    if let Some(front) = ctx.chans.front(chan) {
                         if ctx.fault().is_some_and(|fi| fi.wedge_consume(front.t)) {
-                            return Ok(StepOut::Blocked);
+                            return Ok(StepOut::Blocked(Wait { chan, needs_pop: false }));
                         }
                     }
                     // Dataflow pop: stream pops are in-order and (in these
                     // slices) unconditional per iteration, so the circuit
                     // pops ahead of branch resolution — no t_ctrl term.
-                    let Some((v, _poison, _m, t)) = ctx.chans.pop(key, 0) else {
-                        return Ok(StepOut::Blocked);
+                    let Some((v, _poison, _m, t)) = ctx.chans.pop(chan, 0) else {
+                        return Ok(StepOut::Blocked(Wait { chan, needs_pop: false }));
                     };
                     let t = t + ctx.fault().map_or(0, |fi| fi.chan_pop_stall(t));
                     ctx.bump(t);
                     if let Some(tr) = &mut ctx.trace {
-                        tr.push(self.name, "consume", *mem, t);
+                        tr.push(self.name, "consume", mem, t);
                     }
                     (Some(v), t)
                 }
-                Op::ProduceVal { chan, mem, val } => {
-                    let arr = ctx.m.chan(*chan).arr;
+                DOp::Produce { chan, mem, val } => {
                     let t = tv!(val).max(self.t_ctrl);
                     let lat = ctx.push_lat(t);
-                    ctx.chans.push(
-                        Key::StVal(arr),
-                        Elem { val: get!(val), poison: false, mem: *mem, is_store: true, t },
-                        lat,
-                    );
+                    let e = Elem { val: get!(val), poison: false, mem, is_store: true, t };
+                    if !ctx.chans.try_push(chan, e, lat) {
+                        return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
+                    }
                     ctx.bump(t);
                     if let Some(tr) = &mut ctx.trace {
-                        tr.push(self.name, "produce", *mem, t);
+                        tr.push(self.name, "produce", mem, t);
                     }
                     (None, t)
                 }
-                Op::PoisonVal { chan, mem, pred } => {
+                DOp::Poison { chan, mem, pred } => {
                     let fire = match pred {
                         Some(pv) => get!(pv).as_b(),
                         None => true,
                     };
                     let t = pred.map(|pv| tv!(pv)).unwrap_or(0).max(self.t_ctrl);
                     if fire {
-                        let arr = ctx.m.chan(*chan).arr;
                         let lat = ctx.push_lat(t);
-                        ctx.chans.push(
-                            Key::StVal(arr),
-                            Elem {
-                                val: Val::I(0),
-                                poison: true,
-                                mem: *mem,
-                                is_store: true,
-                                t,
-                            },
-                            lat,
-                        );
+                        let e = Elem { val: Val::I(0), poison: true, mem, is_store: true, t };
+                        if !ctx.chans.try_push(chan, e, lat) {
+                            return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
+                        }
                         if let Some(tr) = &mut ctx.trace {
-                            tr.push(self.name, "poison", *mem, t);
+                            tr.push(self.name, "poison", mem, t);
                         }
                     }
                     ctx.bump(t);
@@ -625,29 +708,32 @@ impl<'a> Unit<'a> {
                 }
             };
 
-            if let (Some(r), Some(v)) = (instr.result, result) {
-                self.env[r.index()] = Some(v);
-                self.tval[r.index()] = t_res;
+            if instr.dest != NO_DEST {
+                if let Some(v) = result {
+                    self.env[instr.dest as usize] = Some(v);
+                    self.tval[instr.dest as usize] = t_res;
+                }
             }
             ctx.bump(t_res);
+            self.dyn_instrs += 1;
             self.pc += 1;
         }
 
         // terminator
-        match &block.term {
-            Terminator::Br(t) => {
+        match block.term {
+            DTerm::Br(t) => {
                 self.prev = Some(self.cur);
-                self.cur = *t;
+                self.cur = t;
             }
-            Terminator::CondBr { cond, t, f: fb } => {
-                let c = self.env[cond.index()]
+            DTerm::CondBr { cond, t, f: fb } => {
+                let c = self.env[cond as usize]
                     .ok_or_else(|| anyhow!("undefined branch condition in @{}", f.name))?;
-                self.t_ctrl = self.t_ctrl.max(self.tval[cond.index()]);
+                self.t_ctrl = self.t_ctrl.max(self.tval[cond as usize]);
                 self.prev = Some(self.cur);
-                self.cur = if c.as_b() { *t } else { *fb };
+                self.cur = if c.as_b() { t } else { fb };
             }
-            Terminator::Ret => return Ok(StepOut::Done),
-            Terminator::Unterminated => bail!("unterminated block in @{}", f.name),
+            DTerm::Ret => return Ok(StepOut::Done),
+            DTerm::Unterminated => bail!("unterminated block in @{}", f.name),
         }
         self.entered = false;
         self.pc = 0;
@@ -659,8 +745,48 @@ impl<'a> Unit<'a> {
 // the DU
 // ---------------------------------------------------------------------------
 
-/// Process as many requests as possible for one array. Returns whether
-/// progress was made.
+/// Release as many in-order ready values as possible from the ROB of
+/// static op `mem`, delivering atomically to every registered consumer
+/// channel. With functional backpressure a full target FIFO defers the
+/// release (both targets must have space — partial delivery would skew
+/// dual-consumed streams); the LSQ parks `mem` on `pending` and waits
+/// for a pop.
+fn flush_rob(lsq: &mut Lsq, mem: u32, ctx: &mut SimCtx) {
+    let cu_ch = ctx.tbl.ldval_of_mem(mem);
+    let agu_ch = ctx.tbl.ldval_agu_of_mem(mem);
+    loop {
+        let Some((rv, rt)) = lsq.robs[mem as usize].peek_ready() else { return };
+        let mut blocked = false;
+        if let Some(ch) = cu_ch {
+            if ctx.chans.full(ch) {
+                ctx.chans.wait_for_pop(ch, lsq.bit);
+                blocked = true;
+            }
+        }
+        if let Some(ch) = agu_ch {
+            if ctx.chans.full(ch) {
+                ctx.chans.wait_for_pop(ch, lsq.bit);
+                blocked = true;
+            }
+        }
+        if blocked {
+            if !lsq.pending.contains(&mem) {
+                lsq.pending.push(mem);
+            }
+            return;
+        }
+        let lat = ctx.push_lat(rt);
+        if let Some(ch) = cu_ch {
+            ctx.chans.push(ch, Elem { val: rv, poison: false, mem, is_store: false, t: rt }, lat);
+        }
+        if let Some(ch) = agu_ch {
+            ctx.chans.push(ch, Elem { val: rv, poison: false, mem, is_store: false, t: rt }, lat);
+        }
+        lsq.robs[mem as usize].release();
+    }
+}
+
+/// Process as many requests as possible for one array.
 ///
 /// The LSQ window semantics (§3.1): requests are admitted in arrival
 /// order; store *values* arrive in store order on the shared `StVal`
@@ -668,13 +794,18 @@ impl<'a> Unit<'a> {
 /// loads may bypass value-pending stores but stall on an earlier
 /// unresolved store to the same address (RAW). Poisoned stores release
 /// their slot without committing.
-fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
-    let arr = lsq.arr;
-    let mut progress = false;
+fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
+    let arr = lsq.arr as usize;
+
+    // retry value deliveries deferred by functional backpressure
+    let pending = std::mem::take(&mut lsq.pending);
+    for mem in pending {
+        flush_rob(lsq, mem, ctx);
+    }
 
     // admit everything that has arrived (fault squeezes shrink the
     // effective queue capacities, never below 1)
-    while let Some(req) = ctx.chans.pop_elem(Key::Req(arr)) {
+    while let Some(req) = ctx.chans.pop_elem(lsq.req_ch) {
         let mut t_enter = req.t.max(lsq.t_enter_last + 1);
         if req.is_store {
             if lsq.store_slots.len() >= ctx.eff_st_q(t_enter) {
@@ -684,11 +815,11 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
             t_enter = t_enter.max(lsq.load_slots.pop_front().unwrap());
         }
         lsq.t_enter_last = t_enter;
-        ctx.per_mem.entry(req.mem).or_insert((0, 0)).0 += 1;
+        ctx.per_mem[req.mem as usize].0 += 1;
         let seq = if req.is_store {
             0
         } else {
-            let rob = lsq.robs.entry(req.mem).or_default();
+            let rob = &mut lsq.robs[req.mem as usize];
             let s = rob.next_admit;
             rob.next_admit += 1;
             s
@@ -704,16 +835,12 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
             let e = lsq.window[wi].clone();
             if e.req.is_store {
                 // only the OLDEST unresolved store matches the next value
-                let is_oldest_store = lsq
-                    .window
-                    .iter()
-                    .take(wi)
-                    .all(|x| !x.req.is_store);
+                let is_oldest_store = lsq.window.iter().take(wi).all(|x| !x.req.is_store);
                 if !is_oldest_store {
                     wi += 1;
                     continue;
                 }
-                let Some(v) = ctx.chans.front(Key::StVal(arr)).copied() else {
+                let Some(v) = ctx.chans.front(lsq.stval_ch).copied() else {
                     wi += 1;
                     continue;
                 };
@@ -723,12 +850,12 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
                     bail!(
                         "store stream order violated on @{}: request m{} paired with value m{} \
                          (sequential consistency broken)",
-                        ctx.m.array(arr).name,
+                        ctx.m.arrays[arr].name,
                         e.req.mem,
                         v.mem
                     );
                 }
-                ctx.chans.pop(Key::StVal(arr), 0);
+                let _ = ctx.chans.pop(lsq.stval_ch, 0);
                 // DropPoison is the deliberately-injected recovery bug:
                 // the DU "loses" the poison bit and falls through to the
                 // commit path, which the differential fuzz harness must
@@ -739,18 +866,18 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
                     let t_resolve = e.t_enter.max(v.t);
                     lsq.store_slots.push_back(t_resolve);
                     ctx.stores_poisoned += 1;
-                    ctx.per_mem.get_mut(&e.req.mem).unwrap().1 += 1;
+                    ctx.per_mem[e.req.mem as usize].1 += 1;
                     ctx.bump(t_resolve);
                     if let Some(tr) = &mut ctx.trace {
                         tr.push("du", "st_poison", e.req.mem, t_resolve);
                     }
                 } else {
                     let addr = e.req.val.as_i();
-                    let alen = ctx.memory[arr.index()].len();
+                    let alen = ctx.memory[arr].len();
                     if addr < 0 || addr as usize >= alen {
                         bail!(
                             "committed store @{}[{}] out of bounds (mem op m{})",
-                            ctx.m.array(arr).name,
+                            ctx.m.arrays[arr].name,
                             addr,
                             e.req.mem
                         );
@@ -758,9 +885,9 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
                     let t_w = e.t_enter.max(v.t).max(lsq.write_port);
                     lsq.write_port = t_w + 1;
                     let t_commit = t_w + ctx.write_lat(t_w);
-                    ctx.memory[arr.index()][addr as usize] = v.val;
+                    ctx.memory[arr][addr as usize] = v.val;
                     ctx.commit_log.push((e.req.mem, addr, v.val));
-                    lsq.commit_at.insert(addr, t_commit);
+                    lsq.commit_at[addr as usize] = t_commit;
                     lsq.store_slots.push_back(t_commit);
                     ctx.stores_committed += 1;
                     ctx.bump(t_commit);
@@ -786,9 +913,13 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
                     wi += 1;
                     continue;
                 }
-                let a = &ctx.memory[arr.index()];
+                let a = &ctx.memory[arr];
                 let v = a[clamp_idx(addr, a.len())];
-                let raw = lsq.commit_at.get(&addr).copied().unwrap_or(0);
+                let raw = if addr >= 0 && (addr as usize) < lsq.commit_at.len() {
+                    lsq.commit_at[addr as usize]
+                } else {
+                    0
+                };
                 let t_issue = e.t_enter.max(raw).max(lsq.read_port);
                 lsq.read_port = t_issue + 1;
                 let t_done = t_issue + ctx.read_lat(t_issue);
@@ -803,38 +934,22 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<bool> {
                 // deliver through the per-op reorder buffer: the consumer
                 // pops values in request order even when loads bypass
                 let mem = e.req.mem;
-                lsq.robs.entry(mem).or_default().insert(e.seq, (v, t_done));
-                loop {
-                    let rob = lsq.robs.get_mut(&mem).unwrap();
-                    let Some((rv, rt)) = rob.pop_ready() else { break };
-                    let lat = ctx.push_lat(rt);
-                    if ctx.cu_consumes.contains(&mem) {
-                        ctx.chans.push(
-                            Key::LdVal(arr, mem),
-                            Elem { val: rv, poison: false, mem, is_store: false, t: rt },
-                            lat,
-                        );
-                    }
-                    if ctx.agu_consumes.contains(&mem) {
-                        ctx.chans.push(
-                            Key::LdValAgu(arr, mem),
-                            Elem { val: rv, poison: false, mem, is_store: false, t: rt },
-                            lat,
-                        );
-                    }
-                }
+                lsq.robs[mem as usize].insert(e.seq, (v, t_done));
+                flush_rob(lsq, mem, ctx);
                 lsq.window.remove(wi);
                 acted = true;
                 break;
             }
         }
-        if acted {
-            progress = true;
-        } else {
+        if !acted {
             break;
         }
     }
-    Ok(progress)
+
+    // park until new input arrives on either stream
+    ctx.chans.wait_for_push(lsq.req_ch, lsq.bit);
+    ctx.chans.wait_for_push(lsq.stval_ch, lsq.bit);
+    Ok(())
 }
 
 /// Snapshot of every non-empty per-array LSQ, for stall diagnostics.
@@ -842,7 +957,7 @@ fn lsq_stats(lsqs: &[Lsq], m: &Module) -> Vec<LsqStat> {
     lsqs.iter()
         .filter(|l| !l.window.is_empty() || !l.store_slots.is_empty() || !l.load_slots.is_empty())
         .map(|l| LsqStat {
-            array: m.array(l.arr).name.clone(),
+            array: m.arrays[l.arr as usize].name.clone(),
             window: l.window.len(),
             store_slots: l.store_slots.len(),
             load_slots: l.load_slots.len(),
@@ -854,6 +969,28 @@ fn lsq_stats(lsqs: &[Lsq], m: &Module) -> Vec<LsqStat> {
 // top level
 // ---------------------------------------------------------------------------
 
+/// Scheduler entity bits (wake-list): AGU, CU, then one per array LSQ.
+const AGU_BIT: u64 = 1 << 0;
+const CU_BIT: u64 = 1 << 1;
+
+#[inline]
+fn lsq_bit(i: usize) -> u64 {
+    1 << (2 + i)
+}
+
+/// Convert the dense per-mem stats to the public sparse map. Entry
+/// creation in the old engine was admission-driven, so "requests > 0"
+/// reproduces the exact key set.
+fn per_mem_map(v: &[(u64, u64)]) -> FxHashMap<u32, (u64, u64)> {
+    let mut out = FxHashMap::default();
+    for (i, &(req, poi)) in v.iter().enumerate() {
+        if req > 0 {
+            out.insert(i as u32, (req, poi));
+        }
+    }
+    out
+}
+
 /// Simulate a compiled architecture over `args` and an initial memory
 /// image.
 pub fn simulate(
@@ -863,34 +1000,28 @@ pub fn simulate(
     cfg: &MachineConfig,
 ) -> Result<SimResult> {
     match c {
-        Compiled::Monolithic { module, .. } => {
-            let f = &module.funcs[0];
+        Compiled::Monolithic { module, decoded, .. } => {
+            let f = &decoded.fns[0];
             let mut ctx = SimCtx {
                 m: module,
+                tbl: &decoded.chans,
                 cfg,
-                chans: Channels::default(),
+                chans: Channels::new(decoded.chans.len(), cfg.chan_cap),
                 memory,
                 max_t: 0,
-                agu_consumes: vec![],
-                cu_consumes: vec![],
                 trace: if cfg.trace { Some(Trace::default()) } else { None },
                 stores_committed: 0,
                 stores_poisoned: 0,
-                per_mem: FxHashMap::default(),
+                per_mem: vec![(0, 0); decoded.chans.n_mems()],
                 commit_log: Vec::new(),
                 deadline: deadline_from(cfg),
             };
-            let mut unit = Unit::new(UnitKind::Sta, "sta", f, args);
-            loop {
-                let progressed = unit.run(&mut ctx)?;
-                if unit.done {
-                    break;
-                }
-                if !progressed {
-                    return Err(ctx
-                        .stall_error(StallReason::Deadlock, vec![unit.stat()], vec![])
-                        .context("STA unit blocked (channel op in monolithic build?)"));
-                }
+            let mut unit = Unit::new(UnitKind::Sta, "sta", f, args, module.arrays.len());
+            unit.run(&mut ctx)?;
+            if !unit.done {
+                return Err(ctx
+                    .stall_error(StallReason::Deadlock, vec![unit.stat()], vec![])
+                    .context("STA unit blocked (channel op in monolithic build?)"));
             }
             Ok(SimResult {
                 cycles: ctx.max_t,
@@ -900,59 +1031,97 @@ pub fn simulate(
                 stores_poisoned: 0,
                 spec_store_reqs: 0,
                 misspec_rate: 0.0,
-                per_mem: ctx.per_mem,
+                per_mem: per_mem_map(&ctx.per_mem),
                 trace: ctx.trace,
                 commit_log: ctx.commit_log,
             })
         }
-        Compiled::Dae { program, .. } => {
+        Compiled::Dae { program, decoded, .. } => {
             let module = &program.module;
+            if module.arrays.len() > 62 {
+                bail!(
+                    "wake-list scheduler supports at most 62 memory arrays (got {})",
+                    module.arrays.len()
+                );
+            }
             let mut ctx = SimCtx {
                 m: module,
+                tbl: &decoded.chans,
                 cfg,
-                chans: Channels::default(),
+                chans: Channels::new(decoded.chans.len(), cfg.chan_cap),
                 memory,
                 max_t: 0,
-                agu_consumes: program.agu_consumes.clone(),
-                cu_consumes: program.cu_consumes.clone(),
                 trace: if cfg.trace { Some(Trace::default()) } else { None },
                 stores_committed: 0,
                 stores_poisoned: 0,
-                per_mem: FxHashMap::default(),
+                per_mem: vec![(0, 0); decoded.chans.n_mems()],
                 commit_log: Vec::new(),
                 deadline: deadline_from(cfg),
             };
             let spec_mems: Vec<u32> = c.speculated_mems();
 
-            let mut agu = Unit::new(UnitKind::Agu, "agu", program.agu_fn(), args);
-            let mut cu = Unit::new(UnitKind::Cu, "cu", program.cu_fn(), args);
-            let mut lsqs: Vec<Lsq> = module
-                .arrays
-                .iter()
-                .enumerate()
-                .map(|(i, _)| Lsq::new(ArrayId(i as u32)))
+            let n_arrays = module.arrays.len();
+            let mut agu = Unit::new(UnitKind::Agu, "agu", &decoded.fns[0], args, n_arrays);
+            let mut cu = Unit::new(UnitKind::Cu, "cu", &decoded.fns[1], args, n_arrays);
+            let mut lsqs: Vec<Lsq> = (0..n_arrays)
+                .map(|i| {
+                    // commit_at is dense over the *actual* memory image
+                    Lsq::new(i as u32, lsq_bit(i), &decoded.chans, ctx.memory[i].len())
+                })
                 .collect();
 
+            let all_bits =
+                AGU_BIT | CU_BIT | lsqs.iter().enumerate().fold(0, |m, (i, _)| m | lsq_bit(i));
+            let mut runnable: u64 = all_bits;
             let mut rounds: u64 = 0;
             let mut stagnant: u64 = 0;
             let mut fingerprint: (u64, u64) = (0, 0);
             loop {
-                let mut progress = false;
-                if !agu.done {
-                    progress |= agu.run(&mut ctx)?;
+                // One scheduler round, fixed order: AGU, CU, LSQ 0..n.
+                // Wakes raised for a not-yet-stepped entity run this
+                // round (matching the old poll-everything cadence);
+                // wakes for an already-stepped entity run next round.
+                let mut cur = runnable;
+                let mut next: u64 = 0;
+                let mut processed: u64 = 0;
+
+                processed |= AGU_BIT;
+                if cur & AGU_BIT != 0 && !agu.done {
+                    if let Some(w) = agu.run(&mut ctx)? {
+                        ctx.chans.register(w, AGU_BIT);
+                    }
+                    let woken = ctx.chans.take_woken();
+                    cur |= woken & !processed;
+                    next |= woken & processed;
                 }
-                if !cu.done {
-                    progress |= cu.run(&mut ctx)?;
+                processed |= CU_BIT;
+                if cur & CU_BIT != 0 && !cu.done {
+                    if let Some(w) = cu.run(&mut ctx)? {
+                        ctx.chans.register(w, CU_BIT);
+                    }
+                    let woken = ctx.chans.take_woken();
+                    cur |= woken & !processed;
+                    next |= woken & processed;
                 }
-                for lsq in &mut lsqs {
-                    progress |= du_step(lsq, &mut ctx)?;
+                for (i, lsq) in lsqs.iter_mut().enumerate() {
+                    let bit = lsq_bit(i);
+                    processed |= bit;
+                    if cur & bit != 0 {
+                        du_step(lsq, &mut ctx)?;
+                        let woken = ctx.chans.take_woken();
+                        cur |= woken & !processed;
+                        next |= woken & processed;
+                    }
                 }
-                if agu.done && cu.done && ctx.chans.all_empty()
+
+                if agu.done
+                    && cu.done
+                    && ctx.chans.all_empty()
                     && lsqs.iter().all(|l| l.window.is_empty())
                 {
                     break;
                 }
-                if !progress {
+                if next == 0 {
                     return Err(ctx
                         .stall_error(
                             StallReason::Deadlock,
@@ -964,7 +1133,8 @@ pub fn simulate(
                             agu.done, cu.done
                         )));
                 }
-                // Progress watchdog: scheduler rounds can report progress
+                runnable = next;
+                // Progress watchdog: scheduler rounds can report wakes
                 // (queue shuffling) without any timestamp or instruction
                 // count advancing; bail with a diagnostic instead of
                 // spinning toward max_dyn_instrs.
@@ -992,10 +1162,14 @@ pub fn simulate(
                 }
             }
 
-            let spec_store_reqs: u64 =
-                spec_mems.iter().map(|m| ctx.per_mem.get(m).map(|x| x.0).unwrap_or(0)).sum();
-            let spec_poisons: u64 =
-                spec_mems.iter().map(|m| ctx.per_mem.get(m).map(|x| x.1).unwrap_or(0)).sum();
+            let spec_store_reqs: u64 = spec_mems
+                .iter()
+                .map(|&m| ctx.per_mem.get(m as usize).map(|x| x.0).unwrap_or(0))
+                .sum();
+            let spec_poisons: u64 = spec_mems
+                .iter()
+                .map(|&m| ctx.per_mem.get(m as usize).map(|x| x.1).unwrap_or(0))
+                .sum();
             Ok(SimResult {
                 cycles: ctx.max_t,
                 memory: ctx.memory,
@@ -1008,7 +1182,7 @@ pub fn simulate(
                 } else {
                     0.0
                 },
-                per_mem: ctx.per_mem,
+                per_mem: per_mem_map(&ctx.per_mem),
                 trace: ctx.trace,
                 commit_log: ctx.commit_log,
             })
@@ -1189,5 +1363,26 @@ exit:
         }
         assert_eq!(diag.units.len(), 1);
         assert!(diag.units[0].dyn_instrs >= 16);
+    }
+
+    #[test]
+    fn chan_cap_backpressure_is_timing_neutral() {
+        // Bounded channels now block the producer host-side (functional
+        // backpressure), but timestamps are data-driven: shrinking the
+        // cap to 1 must not change a single cycle or result bit.
+        let m = parse_module(FIG1C).unwrap();
+        let mem = fig1c_memory(&m);
+        let deflt = MachineConfig::default();
+        let tight = MachineConfig { chan_cap: 1, ..MachineConfig::default() };
+        for arch in [Arch::Dae, Arch::Spec] {
+            let c = build(&m, 0, arch).unwrap();
+            let a = simulate(&c, &[Val::I(64)], mem.clone(), &deflt).unwrap();
+            let b = simulate(&c, &[Val::I(64)], mem.clone(), &tight).unwrap();
+            assert_eq!(a.cycles, b.cycles, "{arch:?}: cap must not change timing");
+            assert_eq!(a.dyn_instrs, b.dyn_instrs, "{arch:?}");
+            assert_eq!(a.stores_committed, b.stores_committed, "{arch:?}");
+            assert_eq!(a.commit_log, b.commit_log, "{arch:?}: commit order pinned");
+            assert!(crate::sim::memory_diff(&a.memory, &b.memory).is_none());
+        }
     }
 }

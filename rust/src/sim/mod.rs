@@ -11,8 +11,9 @@
 //! - side-effecting ops additionally wait for control resolution
 //!   (`t_ctrl`, the running branch-resolution chain of the unit);
 //! - channel pops wait for the matching push + channel latency, rate 1
-//!   per cycle; pushes respect capacity (the pop time of the k-capacity
-//!   earlier element);
+//!   per cycle; a full FIFO (capacity `chan_cap`) blocks its producer
+//!   host-side until a pop frees space (functional backpressure) —
+//!   timestamps are data-driven, so capacity never changes timing;
 //! - the per-array LSQ admits requests in arrival order, allocates store
 //!   entries against the store-queue capacity (paper: 32), bounds load
 //!   concurrency (paper: 4), forwards RAW through commit timestamps and
@@ -25,13 +26,15 @@
 //! array has committed ("loads that cannot be disambiguated at compile
 //! time execute in order", §8.1.1).
 
+pub mod decoded;
 pub mod interp;
 pub mod machine;
 pub mod stall;
 pub mod trace;
 
+pub use decoded::{decode_fns, DecodedSim};
 pub use interp::{interpret, InterpResult};
-pub use machine::{simulate, SimResult};
+pub use machine::{simulate, simulate_checked, SimResult};
 pub use stall::{ChannelStat, LsqStat, StallDiagnostic, StallReason, UnitStat};
 pub use trace::{Trace, TraceEvent};
 
@@ -47,7 +50,11 @@ pub struct MachineConfig {
     pub mem_write_lat: u64,
     /// FIFO channel latency (cycles) — AGU→DU, DU→CU, CU→DU hops.
     pub chan_lat: u64,
-    /// FIFO capacity (elements).
+    /// FIFO capacity (elements). A full channel blocks its producer
+    /// until the consumer pops (functional backpressure); 0 means
+    /// unbounded. Timing is unaffected — timestamps come from data
+    /// dependencies, so the cap shapes host scheduling and the area
+    /// model only.
     pub chan_cap: usize,
     /// LSQ load-queue size (max loads in flight per array). Paper: 4.
     pub ld_q: usize,

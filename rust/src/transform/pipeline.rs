@@ -15,6 +15,7 @@ use super::poison::{place_poisons, PoisonStats};
 use super::{dce, merge_poison, oracle, simplify_cfg, spec_load};
 use crate::analysis::{DomTree, LodAnalysis, LoopInfo, Reachability};
 use crate::ir::{Function, Module};
+use crate::sim::decoded::{decode_fns, DecodedSim};
 use anyhow::Result;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -49,10 +50,19 @@ pub struct BuildStats {
 }
 
 /// A compiled architecture: either a monolithic function (STA) or a
-/// decoupled program (DAE/SPEC/ORACLE).
+/// decoupled program (DAE/SPEC/ORACLE). Both carry the pre-decoded
+/// simulator image ([`DecodedSim`]) built once here, so every
+/// `simulate` call starts from flat instruction streams and dense
+/// channel ids.
 pub enum Compiled {
-    Monolithic { module: Module, arch: Arch },
-    Dae { program: DaeProgram, arch: Arch, map: Option<SpecReqMap>, stats: BuildStats },
+    Monolithic { module: Module, arch: Arch, decoded: DecodedSim },
+    Dae {
+        program: DaeProgram,
+        arch: Arch,
+        map: Option<SpecReqMap>,
+        stats: BuildStats,
+        decoded: DecodedSim,
+    },
 }
 
 impl Compiled {
@@ -98,7 +108,8 @@ pub fn build(m: &Module, func_idx: usize, arch: Arch) -> Result<Compiled> {
                 chans: vec![],
                 funcs: vec![f.clone()],
             };
-            Ok(Compiled::Monolithic { module, arch })
+            let decoded = decode_fns(&module, &[0])?;
+            Ok(Compiled::Monolithic { module, arch, decoded })
         }
         Arch::Dae => {
             let mut p = decouple(m, f, true);
@@ -106,7 +117,14 @@ pub fn build(m: &Module, func_idx: usize, arch: Arch) -> Result<Compiled> {
             simplify_cfg::run(&mut p.module.funcs[1]);
             refresh_consumes(&mut p);
             crate::ir::verify::verify_module(&p.module)?;
-            Ok(Compiled::Dae { program: p, arch, map: None, stats: BuildStats::default() })
+            let decoded = decode_fns(&p.module, &[p.agu, p.cu])?;
+            Ok(Compiled::Dae {
+                program: p,
+                arch,
+                map: None,
+                stats: BuildStats::default(),
+                decoded,
+            })
         }
         Arch::Spec => {
             let lod = LodAnalysis::new(m, f);
@@ -140,7 +158,8 @@ pub fn build(m: &Module, func_idx: usize, arch: Arch) -> Result<Compiled> {
                 refused: hr.refused.clone(),
                 spec_loads_moved: moved,
             };
-            Ok(Compiled::Dae { program: p, arch, map: Some(hr.map), stats })
+            let decoded = decode_fns(&p.module, &[p.agu, p.cu])?;
+            Ok(Compiled::Dae { program: p, arch, map: Some(hr.map), stats, decoded })
         }
         Arch::Oracle => {
             let (of, skipped) = oracle::flatten_lod(m, f);
@@ -157,7 +176,8 @@ pub fn build(m: &Module, func_idx: usize, arch: Arch) -> Result<Compiled> {
                 },
                 ..Default::default()
             };
-            Ok(Compiled::Dae { program: p, arch, map: None, stats })
+            let decoded = decode_fns(&p.module, &[p.agu, p.cu])?;
+            Ok(Compiled::Dae { program: p, arch, map: None, stats, decoded })
         }
     }
 }

@@ -5,9 +5,11 @@
 pub mod bench;
 pub mod fxhash;
 pub mod cli;
+pub mod json;
 pub mod prng;
 
 pub use bench::Bench;
 pub use fxhash::FxHashMap;
 pub use cli::Args;
+pub use json::Json;
 pub use prng::Rng;

@@ -1,0 +1,54 @@
+//! Cycle-determinism regression: the simulator must be a pure function
+//! of (compiled program, inputs, config). Two identical runs — and a
+//! third with tracing enabled, which changes host-side work but must
+//! not change the model — have to agree on every reported number and
+//! on final memory. This catches scheduler-order bugs (wake-list
+//! iteration order, hash-map iteration leaks) that the functional
+//! reference check cannot see.
+
+use dae_spec::coordinator::build_workload;
+use dae_spec::sim::{memory_diff, simulate, MachineConfig, SimResult};
+use dae_spec::transform::{build, Arch};
+use dae_spec::workloads::PAPER_KERNELS;
+
+fn assert_same(kernel: &str, arch: Arch, what: &str, a: &SimResult, b: &SimResult) {
+    assert_eq!(a.cycles, b.cycles, "{kernel}/{arch:?}: cycles differ ({what})");
+    assert_eq!(a.dyn_instrs, b.dyn_instrs, "{kernel}/{arch:?}: dyn_instrs differ ({what})");
+    assert_eq!(
+        a.stores_committed, b.stores_committed,
+        "{kernel}/{arch:?}: stores_committed differ ({what})"
+    );
+    assert_eq!(
+        a.stores_poisoned, b.stores_poisoned,
+        "{kernel}/{arch:?}: stores_poisoned differ ({what})"
+    );
+    assert_eq!(
+        memory_diff(&a.memory, &b.memory),
+        None,
+        "{kernel}/{arch:?}: memory differs ({what})"
+    );
+}
+
+#[test]
+fn repeated_runs_are_cycle_identical() {
+    let cfg = MachineConfig::default();
+    let traced = MachineConfig { trace: true, ..MachineConfig::default() };
+    let mut kernels: Vec<&str> = PAPER_KERNELS.to_vec();
+    kernels.push("nested2");
+    for kernel in kernels {
+        let w = build_workload(kernel, 2026, None).unwrap();
+        for arch in [Arch::Sta, Arch::Dae, Arch::Spec] {
+            let c = build(&w.module, 0, arch).unwrap();
+            let run = |cfg: &MachineConfig| {
+                simulate(&c, &w.args, w.memory.clone(), cfg)
+                    .unwrap_or_else(|e| panic!("{kernel}/{arch:?}: {e:#}"))
+            };
+            let a = run(&cfg);
+            let b = run(&cfg);
+            let t = run(&traced);
+            assert_same(kernel, arch, "run 1 vs run 2", &a, &b);
+            assert_same(kernel, arch, "untraced vs traced", &a, &t);
+            assert!(t.trace.is_some(), "{kernel}/{arch:?}: trace requested but missing");
+        }
+    }
+}

@@ -27,6 +27,26 @@ fn timing_fault_plans_preserve_memory() {
 }
 
 #[test]
+fn timing_plans_cover_all_kernels_and_nested() {
+    // Differential smoke across the whole suite: every paper kernel
+    // plus a nested-if workload survives at least one timing-only fault
+    // plan per architecture bit-identically to the reference — so the
+    // pre-decoded/wake-list engine is cross-checked on every
+    // control-flow shape, not just hist.
+    let cfg = MachineConfig::default();
+    let mut kernels: Vec<&str> = dae_spec::workloads::PAPER_KERNELS.to_vec();
+    kernels.push("nested3");
+    for kernel in kernels {
+        let out = fuzz_kernel(kernel, 2026, 1, &FUZZ_ARCHS, &cfg, false)
+            .unwrap_or_else(|e| panic!("{kernel}: fuzz harness error: {e:#}"));
+        for f in &out.failures {
+            eprintln!("{f}");
+        }
+        assert!(out.ok(), "{kernel}: timing-only plan diverged from the reference");
+    }
+}
+
+#[test]
 fn fuzz_is_deterministic_across_runs() {
     // same base seed → identical plans → identical verdicts
     let p1: Vec<FaultPlan> = (0..4).map(|i| FaultPlan::generate(99, i)).collect();

@@ -76,8 +76,11 @@ entry:
 #[test]
 fn min_capacity_stress_completes_and_matches() {
     // Minimum queue everywhere: 1-deep channels, 1 load in flight,
-    // 1 store slot. The machine must still terminate (no channel
-    // deadlock) and commit exactly the reference memory.
+    // 1 store slot. Channel capacity is *functional* backpressure — a
+    // full FIFO blocks its producer until the consumer pops — so this
+    // pins that the scheduler drains every blocked-producer cycle: the
+    // machine must still terminate (no channel deadlock) and commit
+    // exactly the reference memory.
     let cfg = MachineConfig {
         chan_cap: 1,
         ld_q: 1,
@@ -102,6 +105,37 @@ fn min_capacity_stress_completes_and_matches() {
                 memory_diff(&sim.memory, &reference.memory),
                 None,
                 "{kernel}/{arch:?} diverges at minimum queue capacity"
+            );
+        }
+    }
+}
+
+#[test]
+fn chan_cap_is_functional_only_backpressure() {
+    // Timestamps are computed from data dependencies, not from host
+    // scheduling order, so capacity-induced producer blocking must not
+    // change a single reported number — only host-side scheduling.
+    // cap=1 (maximum backpressure) vs the default cap must agree on
+    // cycles, instruction counts and memory, across architectures.
+    let tight = MachineConfig { chan_cap: 1, ..MachineConfig::default() };
+    let roomy = MachineConfig::default();
+    for kernel in ["hist", "thr"] {
+        let w = build_workload(kernel, 7, None).unwrap();
+        for arch in [Arch::Sta, Arch::Dae, Arch::Spec] {
+            let c = build(&w.module, 0, arch).unwrap();
+            let a = simulate(&c, &w.args, w.memory.clone(), &tight)
+                .unwrap_or_else(|e| panic!("{kernel}/{arch:?} cap=1: {e:#}"));
+            let b = simulate(&c, &w.args, w.memory.clone(), &roomy)
+                .unwrap_or_else(|e| panic!("{kernel}/{arch:?} default cap: {e:#}"));
+            assert_eq!(a.cycles, b.cycles, "{kernel}/{arch:?}: cap changed cycles");
+            assert_eq!(
+                a.dyn_instrs, b.dyn_instrs,
+                "{kernel}/{arch:?}: cap changed instruction count"
+            );
+            assert_eq!(
+                memory_diff(&a.memory, &b.memory),
+                None,
+                "{kernel}/{arch:?}: cap changed final memory"
             );
         }
     }
