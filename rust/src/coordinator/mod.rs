@@ -30,6 +30,14 @@ USAGE:
                  host-side simulator throughput per kernel x arch; writes
                  BENCH_sim.json and (with --baseline) fails if any cell's
                  best time regresses by more than --max-regress percent
+  dae-spec lint [--kernel <name>|all] [--arch sta,dae,spec] [--seed N]
+                [--deny error|warn|info] [--verbose]
+                static semantic verification of compiled slices: decoupling
+                legality (DEC), channel push/pop balance per path and per
+                iteration (CHAN), poison coverage + speculative-value taint
+                (POISON), and store-order/SC preservation (SC); exits
+                non-zero if any diagnostic at or above --deny fires
+                (default error; --verbose also prints info notes)
   dae-spec compile --kernel <name> [--arch ...]      dump transformed IR
   dae-spec lsq-sweep [--kernel bfs] [--sizes 4,8,16,32,64]
   dae-spec list                                      list kernels
@@ -51,6 +59,7 @@ pub fn cli_main(argv: Vec<String>) -> i32 {
         "repro" => cmd_repro(&args),
         "run" => cmd_run(&args),
         "fuzz" => cmd_fuzz(&args),
+        "lint" => cmd_lint(&args),
         "bench" => bench::cmd_bench(&args),
         "compile" => cmd_compile(&args),
         "lsq-sweep" => cmd_lsq_sweep(&args),
@@ -104,7 +113,19 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
     };
     let mut diverged = 0usize;
     let mut cells = 0usize;
+    let mut uncaught = 0usize;
     for kernel in &kernels {
+        // Static/dynamic cross-validation (SPEC only): every semantic
+        // mutation the fuzzer could inject must also be flagged by the
+        // linter without running the machine.
+        if archs.contains(&crate::transform::Arch::Spec) {
+            let misses =
+                crate::fault::lint_cross_validate(kernel, seed, args.has_flag("verbose"))?;
+            for m in &misses {
+                eprintln!("lint-xval MISS {m}");
+            }
+            uncaught += misses.len();
+        }
         let out = crate::fault::fuzz_kernel(
             kernel,
             seed,
@@ -135,11 +156,66 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
             diverged += out.failures.len();
         }
     }
+    if uncaught > 0 {
+        anyhow::bail!(
+            "fuzz: {uncaught} semantic mutation(s) escaped the static linter \
+             (see `lint-xval MISS` lines above)"
+        )
+    }
     if diverged > 0 {
         anyhow::bail!(
             "fuzz: {diverged}/{cells} plan x arch cell(s) diverged across {} kernel(s)",
             kernels.len()
         )
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let kernel = args.get("kernel").unwrap_or("all");
+    let seed = args.get_u64("seed", 2026);
+    let archs = parse_archs(Some(args.get("arch").unwrap_or("sta,dae,spec")))?;
+    let deny = crate::lint::Severity::parse(args.get("deny").unwrap_or("error"))
+        .ok_or_else(|| anyhow::anyhow!("lint: --deny must be error|warn|info"))?;
+    let show = if args.has_flag("verbose") {
+        crate::lint::Severity::Info
+    } else {
+        crate::lint::Severity::Warn
+    };
+    let kernels: Vec<String> = if kernel == "all" {
+        let mut ks: Vec<String> =
+            crate::workloads::PAPER_KERNELS.iter().map(|s| s.to_string()).collect();
+        ks.push("nested3".to_string());
+        ks
+    } else {
+        vec![kernel.to_string()]
+    };
+    let mut denied = 0usize;
+    for kernel in &kernels {
+        let w = build_workload(kernel, seed, None)?;
+        for &arch in &archs {
+            let c = crate::transform::build(&w.module, 0, arch)?;
+            let rep = crate::lint::lint_compiled(&w.module, 0, &c);
+            let hits = rep.count_at_least(deny);
+            denied += hits;
+            let shown = rep.render(show.min(deny));
+            if !shown.is_empty() {
+                println!("---- {} / {} ----", kernel, arch.name());
+                print!("{shown}");
+            }
+            if hits == 0 {
+                println!(
+                    "lint: {} / {} clean ({} note(s) below {} severity)",
+                    kernel,
+                    arch.name(),
+                    rep.diags.len(),
+                    deny.name()
+                );
+            }
+        }
+    }
+    if denied > 0 {
+        anyhow::bail!("lint: {denied} diagnostic(s) at or above {} severity", deny.name());
     }
     Ok(())
 }

@@ -11,8 +11,9 @@
 //! reproduces) and reported with the exact seed for replay.
 
 use super::{FaultInjector, FaultPlan};
+use crate::ir::Op;
 use crate::sim::{interpret, memory_diff, simulate, MachineConfig};
-use crate::transform::{build, Arch};
+use crate::transform::{build, Arch, Compiled, DaeProgram};
 use anyhow::{Context, Result};
 use std::fmt;
 
@@ -166,4 +167,110 @@ pub fn fuzz_kernel(
         }
     }
     Ok(FuzzOutcome { kernel: kernel.to_string(), plans, archs: archs.to_vec(), failures })
+}
+
+/// IR-level semantic mutations — the static analogues of the protocol
+/// bugs the differential fuzzer hunts dynamically. Each deletes one
+/// protocol-critical instruction from a compiled SPEC program; the
+/// linter ([`crate::lint`]) must flag every one of them with an
+/// Error-severity diagnostic, without running the machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SemanticMutation {
+    /// Delete the first `poison_val` in the execute slice: a
+    /// mis-speculated store would silently never be squashed
+    /// (the DU pairing of Lemma 6.1 desynchronises).
+    DropPoison,
+    /// Delete the first `send_st_addr` in the access slice: a store
+    /// request is never pushed, so the k-th value pairs with the
+    /// (k+1)-th request.
+    DropStorePush,
+    /// Delete the first `produce_val` in the execute slice: a committed
+    /// store loses its value.
+    DropProduce,
+}
+
+impl SemanticMutation {
+    pub const ALL: [SemanticMutation; 3] = [
+        SemanticMutation::DropPoison,
+        SemanticMutation::DropStorePush,
+        SemanticMutation::DropProduce,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SemanticMutation::DropPoison => "drop-poison",
+            SemanticMutation::DropStorePush => "drop-store-push",
+            SemanticMutation::DropProduce => "drop-produce",
+        }
+    }
+}
+
+/// Apply `which` to `p`, returning a rendered description of the removed
+/// instruction, or `None` if the program has no such instruction (e.g. a
+/// kernel whose SPEC build needed no poisons).
+pub fn apply_semantic_mutation(p: &mut DaeProgram, which: SemanticMutation) -> Option<String> {
+    let (fi, want): (usize, fn(&Op) -> bool) = match which {
+        SemanticMutation::DropPoison => (p.cu, |op| matches!(op, Op::PoisonVal { .. })),
+        SemanticMutation::DropStorePush => (p.agu, |op| matches!(op, Op::SendStAddr { .. })),
+        SemanticMutation::DropProduce => (p.cu, |op| matches!(op, Op::ProduceVal { .. })),
+    };
+    let mut target = None;
+    'outer: for b in &p.module.funcs[fi].blocks {
+        for &iid in &b.instrs {
+            if want(&p.module.funcs[fi].instr(iid).op) {
+                target = Some(iid);
+                break 'outer;
+            }
+        }
+    }
+    let target = target?;
+    let desc = crate::ir::printer::print_op(
+        &p.module,
+        &p.module.funcs[fi],
+        &p.module.funcs[fi].instr(target).op,
+    );
+    crate::transform::detach_instr(&mut p.module.funcs[fi], target);
+    Some(desc)
+}
+
+/// Cross-validate the linter against the mutation space: every
+/// applicable [`SemanticMutation`] of `kernel`'s SPEC build must be
+/// caught statically by [`crate::lint::lint_dae`]. Returns one
+/// human-readable line per *uncaught* mutation (empty = full coverage).
+pub fn lint_cross_validate(kernel: &str, seed: u64, verbose: bool) -> Result<Vec<String>> {
+    let w = crate::coordinator::build_workload(kernel, seed, None)?;
+    let c = build(&w.module, 0, Arch::Spec).with_context(|| format!("{kernel}/SPEC"))?;
+    let Compiled::Dae { program, map, .. } = &c else {
+        return Ok(vec![format!("{kernel}: SPEC build is not a decoupled program")]);
+    };
+    let mut uncaught = Vec::new();
+    for mutation in SemanticMutation::ALL {
+        let mut p = program.clone();
+        let Some(removed) = apply_semantic_mutation(&mut p, mutation) else {
+            if verbose {
+                println!(
+                    "lint-xval {kernel}: {} — no target instruction, skipped",
+                    mutation.name()
+                );
+            }
+            continue;
+        };
+        let rep = crate::lint::lint_dae(Some((&w.module, &w.module.funcs[0])), &p, map.as_ref());
+        if rep.has_errors() {
+            if verbose {
+                println!(
+                    "lint-xval {kernel}: {} caught ({} error(s)) after removing `{removed}`",
+                    mutation.name(),
+                    rep.count_at_least(crate::lint::Severity::Error)
+                );
+            }
+        } else {
+            uncaught.push(format!(
+                "{kernel}: mutation {} (removed `{removed}`) produced no Error-severity \
+                 lint diagnostic",
+                mutation.name()
+            ));
+        }
+    }
+    Ok(uncaught)
 }

@@ -18,5 +18,8 @@
 pub mod harness;
 pub mod plan;
 
-pub use harness::{check_plan, fuzz_kernel, minimize_plan, FuzzFailure, FuzzOutcome};
+pub use harness::{
+    apply_semantic_mutation, check_plan, fuzz_kernel, lint_cross_validate, minimize_plan,
+    FuzzFailure, FuzzOutcome, SemanticMutation,
+};
 pub use plan::{FaultEvent, FaultInjector, FaultPlan, FaultSite};

@@ -35,6 +35,11 @@ pub enum FaultSite {
     LsqLoadSqueeze,
     /// Squeeze the LSQ store queue down to `magnitude` entries (floor 1).
     LsqStoreSqueeze,
+    /// Extra busy cycles on the STA machine's per-array read port (the
+    /// port-conflict serialization of the static-schedule model).
+    StaReadPortStall,
+    /// Extra busy cycles on the STA machine's per-array write port.
+    StaWritePortStall,
     /// FUNCTIONAL (test-only): block every `consume_val` whose operand has
     /// arrived — wedges the machine so the deadlock watchdog must fire.
     WedgeConsume,
@@ -46,13 +51,15 @@ pub enum FaultSite {
 
 impl FaultSite {
     /// All sites that only perturb timing (safe for equivalence fuzzing).
-    pub const TIMING: [FaultSite; 6] = [
+    pub const TIMING: [FaultSite; 8] = [
         FaultSite::ChanPushDelay,
         FaultSite::ChanPopStall,
         FaultSite::MemReadDelay,
         FaultSite::MemWriteDelay,
         FaultSite::LsqLoadSqueeze,
         FaultSite::LsqStoreSqueeze,
+        FaultSite::StaReadPortStall,
+        FaultSite::StaWritePortStall,
     ];
 
     pub fn is_timing_only(self) -> bool {
@@ -70,6 +77,8 @@ impl FaultSite {
             FaultSite::LsqStoreSqueeze => 6,
             FaultSite::WedgeConsume => 7,
             FaultSite::DropPoison => 8,
+            FaultSite::StaReadPortStall => 9,
+            FaultSite::StaWritePortStall => 10,
         }
     }
 }
@@ -129,7 +138,7 @@ impl FaultPlan {
         let n = 1 + rng.below(5) as usize;
         let events = (0..n)
             .map(|_| {
-                let site = FaultSite::TIMING[rng.below(6) as usize];
+                let site = FaultSite::TIMING[rng.below(FaultSite::TIMING.len() as u64) as usize];
                 let from = rng.below(30_000);
                 let until = from + 1 + rng.below(10_000);
                 let magnitude = match site {
@@ -249,6 +258,16 @@ impl FaultInjector {
             Some(m) => base.min((m as usize).max(1)),
             None => base,
         }
+    }
+
+    /// Extra busy-until cycles on the STA machine's per-array read port.
+    pub fn sta_read_port_extra(&self, t: u64) -> u64 {
+        self.jitter(FaultSite::StaReadPortStall, t)
+    }
+
+    /// Extra busy-until cycles on the STA machine's per-array write port.
+    pub fn sta_write_port_extra(&self, t: u64) -> u64 {
+        self.jitter(FaultSite::StaWritePortStall, t)
     }
 
     /// Functional: should a consume whose operand arrived at `t` wedge?

@@ -12,7 +12,9 @@ use anyhow::{bail, Result};
 ///    exactly once;
 /// 3. every use is dominated by its definition (standard SSA rule; φ uses
 ///    are checked at the end of the corresponding incoming block);
-/// 4. operand types match op expectations.
+/// 4. operand types match op expectations;
+/// 5. the CFG is reducible: every retreating edge is a true backedge,
+///    i.e. targets a loop header that dominates its latch.
 pub fn verify_function(m: &Module, f: &Function) -> Result<()> {
     let n = f.num_blocks();
     if n == 0 {
@@ -21,6 +23,50 @@ pub fn verify_function(m: &Module, f: &Function) -> Result<()> {
 
     let preds = f.preds();
     let dom = DomTree::new(f);
+
+    // Reducibility (iterative DFS colouring). The loop analysis and the
+    // lint path summaries both assume a natural-loop decomposition
+    // exists; an edge retreating into a cycle without passing its header
+    // has no such reading, so name it precisely.
+    {
+        const WHITE: u8 = 0;
+        const GREY: u8 = 1;
+        const BLACK: u8 = 2;
+        let mut color = vec![WHITE; n];
+        let mut stack: Vec<(super::BlockId, usize)> = vec![(f.entry, 0)];
+        color[f.entry.index()] = GREY;
+        while let Some(frame) = stack.last_mut() {
+            let b = frame.0;
+            let succs = f.succs(b);
+            if frame.1 < succs.len() {
+                let s = succs[frame.1];
+                frame.1 += 1;
+                match color[s.index()] {
+                    WHITE => {
+                        color[s.index()] = GREY;
+                        stack.push((s, 0));
+                    }
+                    GREY => {
+                        if !dom.dominates(s, b) {
+                            bail!(
+                                "irreducible control flow in @{}: retreating edge \
+                                 {} -> {} re-enters a loop whose header {} does not \
+                                 dominate the edge's source",
+                                f.name,
+                                f.block(b).name,
+                                f.block(s).name,
+                                f.block(s).name
+                            );
+                        }
+                    }
+                    _ => {}
+                }
+            } else {
+                color[b.index()] = BLACK;
+                stack.pop();
+            }
+        }
+    }
 
     for (bi, b) in f.blocks.iter().enumerate() {
         if !dom.is_reachable(super::BlockId(bi as u32)) {
@@ -295,6 +341,29 @@ exit:
         let f = b.finish();
         let m = Module::new();
         assert!(verify_function(&m, &f).is_err());
+    }
+
+    #[test]
+    fn rejects_irreducible() {
+        // entry branches into both halves of an a <-> b cycle: the
+        // retreating edge b -> a targets a block that does not dominate
+        // its source, so no natural-loop decomposition exists.
+        use crate::ir::{CmpOp, FunctionBuilder, Type};
+        let mut bld = FunctionBuilder::new("irr");
+        let n = bld.param("n", Type::I64);
+        let (entry, ba, bb) = (bld.block("entry"), bld.block("a"), bld.block("b"));
+        bld.switch_to(entry);
+        let c = bld.icmp(CmpOp::Lt, n, n);
+        bld.cond_br(c, ba, bb);
+        bld.switch_to(ba);
+        bld.br(bb);
+        bld.switch_to(bb);
+        bld.br(ba);
+        let f = bld.finish();
+        let m = Module::new();
+        let err = verify_function(&m, &f).unwrap_err().to_string();
+        assert!(err.contains("irreducible"), "unexpected error: {err}");
+        assert!(err.contains("b -> a") || err.contains("a -> b"), "edge not named: {err}");
     }
 
     #[test]

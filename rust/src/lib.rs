@@ -29,8 +29,30 @@
 //!   artifacts and the vectorised speculation engine (paper §10 future
 //!   work); gated behind the `pjrt` feature so the default build has no
 //!   XLA dependency.
+//! - [`lint`] — the static semantic verifier (`dae-spec lint`): after
+//!   every `transform::build` it checks decoupling legality (DEC),
+//!   channel push/pop balance per path and per loop iteration (CHAN),
+//!   poison coverage + speculative-value taint (POISON), and
+//!   store-order/sequential-consistency preservation (SC) — the static
+//!   shadow of the paper's Lemma 6.1 and Theorem 6.2. Runs automatically
+//!   in debug builds the way `ir::verify` does; the fuzz harness
+//!   cross-validates that every injectable semantic mutation (dropped
+//!   poison, dropped push, dropped produce) is flagged statically.
 //! - [`util`] — PRNG, mini CLI, bench + property-test harnesses (the
 //!   offline build has no clap/criterion/proptest).
+//!
+//! # Static verification
+//!
+//! `ir::verify` rejects structurally malformed SSA (including
+//! irreducible CFGs — every retreating edge must be a backedge to a
+//! dominating header); [`lint`] rejects semantically broken *decoupled*
+//! modules. Diagnostics are structured (`rule[severity] @function block:
+//! message` plus the offending instruction rendered by `ir::printer`);
+//! `dae-spec lint --kernel all` sweeps every paper kernel across
+//! STA/DAE/SPEC and exits non-zero on `--deny`-level findings. Info
+//! notes (LoD-chain attribution, skipped path budgets) are expected on
+//! healthy builds and never fail the lint; errors mean the module must
+//! not be simulated.
 //!
 //! # Performance
 //!
@@ -64,6 +86,7 @@ pub mod area;
 pub mod coordinator;
 pub mod fault;
 pub mod ir;
+pub mod lint;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;

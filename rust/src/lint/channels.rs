@@ -1,0 +1,218 @@
+//! Rule family CHAN — channel-protocol balance.
+//!
+//! For every channel the machine will allocate (per-mem load
+//! request/value pairs, per-array store-value streams) the number of
+//! pushes and pops must agree on every path and per loop iteration —
+//! otherwise the slices drift apart and eventually deadlock or pair the
+//! wrong elements. The check works on [`super::paths`] summaries:
+//!
+//! - within one function, paths that share a key (identical decisions at
+//!   all branches shared with the partner slice) must have intersecting
+//!   count intervals — the partner cannot tell such paths apart, so a
+//!   difference is un-mirrorable;
+//! - across functions, matched keys must have intersecting intervals;
+//! - a key only one side has (a branch the other slice folded away) is
+//!   checked leniently: its interval must be compatible with *some*
+//!   partner path of the region.
+
+use super::paths::{self, EvKind, FnPaths, Key, PathEvent, RegionPaths};
+use super::{diag_at, diag_fn, LintReport, Rule, Severity};
+use crate::ir::{Function, InstrId, Module};
+use crate::transform::DaeProgram;
+use std::collections::BTreeSet;
+
+/// Per-key combined interval with a sample instruction for diagnostics.
+struct KeyInterval {
+    key: Key,
+    lo: u32,
+    hi: u32,
+    sample: Option<InstrId>,
+}
+
+/// Combine per-path intervals per key; an empty intra-key intersection is
+/// reported and the key dropped.
+fn collect(
+    m: &Module,
+    f: &Function,
+    region: &RegionPaths,
+    tag: &dyn Fn(&PathEvent) -> bool,
+    rule: Rule,
+    what: &str,
+    r: &mut LintReport,
+) -> Vec<KeyInterval> {
+    let mut out = Vec::new();
+    for (key, group) in paths::group_by_key(&region.paths) {
+        let mut lo = 0u32;
+        let mut hi = u32::MAX;
+        let mut sample = None;
+        for p in &group {
+            let (plo, phi) = paths::count_interval(p, tag);
+            lo = lo.max(plo);
+            hi = hi.min(phi);
+            if sample.is_none() {
+                sample = paths::first_event(p, tag).map(|e| e.iid);
+            }
+        }
+        if lo > hi {
+            let msg = format!(
+                "unbalanced {what}: paths with identical shared-branch decisions [{}] \
+                 disagree on the event count (between {} and {} per iteration)",
+                paths::key_str(&key),
+                group.iter().map(|p| paths::count_interval(p, tag).0).min().unwrap_or(0),
+                lo,
+            );
+            match sample {
+                Some(iid) => r.push(diag_at(rule, Severity::Error, m, f, iid, msg)),
+                None => r.push(diag_fn(rule, Severity::Error, f, region.name.clone(), msg)),
+            }
+            continue;
+        }
+        out.push(KeyInterval { key, lo, hi, sample });
+    }
+    out
+}
+
+fn intersects(a: &KeyInterval, b: &KeyInterval) -> bool {
+    a.lo.max(b.lo) <= a.hi.min(b.hi)
+}
+
+/// Check one (tag-on-side-A, tag-on-side-B) pair over one region pair.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn check_balance(
+    m: &Module,
+    fa: &Function,
+    ra: Option<&RegionPaths>,
+    fb: &Function,
+    rb: Option<&RegionPaths>,
+    tag_a: &dyn Fn(&PathEvent) -> bool,
+    tag_b: &dyn Fn(&PathEvent) -> bool,
+    rule: Rule,
+    what: &str,
+    r: &mut LintReport,
+) {
+    let empty = RegionPaths {
+        name: None,
+        paths: vec![paths::PathSummary { key: vec![], events: vec![] }],
+        truncated: false,
+    };
+    let (ra, rb) = (ra.unwrap_or(&empty), rb.unwrap_or(&empty));
+    if ra.truncated || rb.truncated {
+        return; // already surfaced as a BUDGET diagnostic
+    }
+    let ia = collect(m, fa, ra, tag_a, rule, what, r);
+    let ib = collect(m, fb, rb, tag_b, rule, what, r);
+
+    let mut cross = |ours: &[KeyInterval],
+                     theirs: &[KeyInterval],
+                     f: &Function,
+                     region: &RegionPaths,
+                     r: &mut LintReport| {
+        for ki in ours {
+            let verdict = match theirs.iter().find(|kj| kj.key == ki.key) {
+                Some(kj) => intersects(ki, kj),
+                // Unmatched key: the other side folded this branch away;
+                // accept if any of its paths could mirror our count.
+                None if theirs.is_empty() => ki.lo == 0,
+                None => theirs.iter().any(|kj| intersects(ki, kj)),
+            };
+            if !verdict {
+                let msg = format!(
+                    "unbalanced {what}: on paths [{}] this slice sees {}..{} events \
+                     per iteration but the partner slice cannot match it",
+                    paths::key_str(&ki.key),
+                    ki.lo,
+                    if ki.hi == u32::MAX { ki.lo } else { ki.hi },
+                );
+                match ki.sample {
+                    Some(iid) => r.push(diag_at(rule, Severity::Error, m, f, iid, msg)),
+                    None => r.push(diag_fn(rule, Severity::Error, f, region.name.clone(), msg)),
+                }
+            }
+        }
+    };
+    cross(&ia, &ib, fa, ra, r);
+    cross(&ib, &ia, fb, rb, r);
+}
+
+/// All CHAN checks for one decoupled program.
+pub fn check(p: &DaeProgram, pa: &FnPaths, pc: &FnPaths, r: &mut LintReport) {
+    let m = &p.module;
+    let agu = p.agu_fn();
+    let cu = p.cu_fn();
+
+    for (ra, rc) in paths::match_regions(pa, pc) {
+        // Per CU-consumed load: one request in the AGU per value popped
+        // in the CU.
+        for &mem in &p.cu_consumes {
+            check_balance(
+                m,
+                agu,
+                ra,
+                cu,
+                rc,
+                &|e| e.kind == EvKind::SendLd && e.mem == mem,
+                &|e| e.kind == EvKind::ConsumeCu && e.mem == mem,
+                Rule::ChanBalance,
+                &format!("load m{mem} request/value traffic"),
+                r,
+            );
+        }
+        // Per array with store traffic: one store request per store
+        // value or poison.
+        let store_arrs: BTreeSet<u32> =
+            p.mem_ops.iter().filter(|mo| mo.is_store).map(|mo| mo.arr.0).collect();
+        for &arr in &store_arrs {
+            check_balance(
+                m,
+                agu,
+                ra,
+                cu,
+                rc,
+                &|e| e.kind == EvKind::SendSt && e.arr == arr,
+                &|e| matches!(e.kind, EvKind::Produce | EvKind::Poison) && e.arr == arr,
+                Rule::ChanBalance,
+                &format!("store traffic on array {arr} (requests vs values+poisons)"),
+                r,
+            );
+        }
+    }
+
+    // AGU-internal LoD balance: a send and its own consume travel the
+    // same paths, so the counts must agree exactly path by path.
+    for &mem in &p.agu_consumes {
+        for region in &pa.regions {
+            if region.truncated {
+                continue;
+            }
+            for path in &region.paths {
+                let (sends, _) =
+                    paths::count_interval(path, |e| e.kind == EvKind::SendLd && e.mem == mem);
+                let (pops, _) =
+                    paths::count_interval(path, |e| e.kind == EvKind::ConsumeAgu && e.mem == mem);
+                if sends != pops {
+                    let sample = paths::first_event(path, |e| {
+                        e.mem == mem && matches!(e.kind, EvKind::SendLd | EvKind::ConsumeAgu)
+                    })
+                    .map(|e| e.iid);
+                    let msg = format!(
+                        "LoD desync for m{mem}: path [{}] sends {sends} request(s) but pops \
+                         {pops} value(s)",
+                        paths::key_str(&path.key),
+                    );
+                    match sample {
+                        Some(iid) => {
+                            r.push(diag_at(Rule::ChanBalance, Severity::Error, m, agu, iid, msg))
+                        }
+                        None => r.push(diag_fn(
+                            Rule::ChanBalance,
+                            Severity::Error,
+                            agu,
+                            region.name.clone(),
+                            msg,
+                        )),
+                    }
+                }
+            }
+        }
+    }
+}

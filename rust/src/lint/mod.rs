@@ -1,0 +1,266 @@
+//! Static semantic lint for compiled DAE/SPEC modules.
+//!
+//! `ir/verify.rs` checks *structural* SSA well-formedness; this module
+//! checks the *semantic* contracts the paper's transforms must preserve,
+//! turning what used to be runtime fuzz findings into compile-time
+//! diagnostics. Four rule families:
+//!
+//! - **DEC — decoupling legality** ([`slice`]): the access slice contains
+//!   only address-generation work (no loads/stores/produces/poisons, no
+//!   pops of CU-bound value channels) and the execute slice contains no
+//!   request traffic; loss-of-decoupling consumes in the AGU are
+//!   attributed to the sends that depend on them (via
+//!   `analysis/defuse.rs` backward slices + `analysis/control_dep.rs`).
+//! - **CHAN — channel-protocol balance** ([`channels`]): per channel,
+//!   symbolic push/pop counts agree on every path and per loop iteration
+//!   (path summaries over `analysis/loops.rs`, reducible CFGs only), so
+//!   the slices can never statically desynchronize or deadlock.
+//! - **POISON — poison soundness** ([`taint`]): every speculated store
+//!   receives exactly one store value or poison per request on every
+//!   path (the static shadow of the DU's Lemma 6.1 pairing), and a
+//!   forward taint dataflow proves every speculatively consumed load
+//!   value is guarded by the load's architectural home block before it
+//!   reaches a store value or steers control flow.
+//! - **SC — sequential-consistency preservation** ([`seqcst`]): the
+//!   per-array store-request order in the AGU matches the per-array
+//!   store-value/poison order in the CU (Lemma 6.1), and the CU's
+//!   produce order matches the sequential program order of the original
+//!   function (the paper's Theorem 6.2).
+//!
+//! Violations are structured [`Diagnostic`]s (rule id, severity,
+//! function/block/instruction location, instruction text rendered with
+//! `ir/printer.rs`). [`lint_compiled`] runs after `transform::build` on
+//! every architecture in debug builds, the way `ir/verify.rs` already
+//! does; `dae-spec lint` runs it from the CLI; the fuzz harness
+//! cross-validates it by asserting every IR-level semantic mutation the
+//! differential fuzzer can inject (dropped poison, dropped push, dropped
+//! produce) is also flagged statically.
+
+pub mod channels;
+pub mod paths;
+pub mod seqcst;
+pub mod slice;
+pub mod taint;
+
+use crate::ir::{printer, Function, InstrId, Module};
+use crate::transform::{Arch, Compiled, DaeProgram, SpecReqMap};
+use std::fmt;
+
+/// Lint rule families. `id()` is the stable tag printed in diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Decoupling legality (slice op classes, LoD attribution).
+    Decouple,
+    /// Channel push/pop balance per path and per iteration.
+    ChanBalance,
+    /// Poison coverage and speculative-value taint.
+    PoisonSound,
+    /// Store-order preservation (Lemma 6.1 + Theorem 6.2).
+    SeqCst,
+    /// CFG reducibility — precondition of the path analysis itself.
+    Reducible,
+    /// The path enumerator hit its budget; affected region skipped.
+    PathBudget,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::Decouple => "DEC",
+            Rule::ChanBalance => "CHAN",
+            Rule::PoisonSound => "POISON",
+            Rule::SeqCst => "SC",
+            Rule::Reducible => "RED",
+            Rule::PathBudget => "BUDGET",
+        }
+    }
+}
+
+/// Diagnostic severity. `Error` means the compiled module is unsound and
+/// must not be simulated; `Warn` flags constructs that are suspicious but
+/// have a sound reading; `Info` is attribution/bookkeeping (LoD chains,
+/// skipped regions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Severity> {
+        match s {
+            "info" => Some(Severity::Info),
+            "warn" => Some(Severity::Warn),
+            "error" => Some(Severity::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One structured lint finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub severity: Severity,
+    /// Function the finding is in (slice name, e.g. `hist__cu`).
+    pub func: String,
+    /// Block name, when the finding anchors to a block.
+    pub block: Option<String>,
+    /// Offending instruction rendered with `ir/printer.rs`, when the
+    /// finding anchors to one.
+    pub instr: Option<String>,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, out: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(out, "{}[{}] @{}", self.severity.name(), self.rule.id(), self.func)?;
+        if let Some(b) = &self.block {
+            write!(out, " {b}:")?;
+        }
+        write!(out, " {}", self.msg)?;
+        if let Some(i) = &self.instr {
+            write!(out, "\n    at: {i}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Result of linting one compiled module.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diags.push(d);
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn count_at_least(&self, min: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity >= min).count()
+    }
+
+    /// Render every diagnostic at or above `min`, one per line group.
+    pub fn render(&self, min: Severity) -> String {
+        let mut s = String::new();
+        for d in self.diags.iter().filter(|d| d.severity >= min) {
+            s.push_str(&d.to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Does any diagnostic name `rule` at Error severity?
+    pub fn has_error_for(&self, rule: Rule) -> bool {
+        self.diags.iter().any(|d| d.rule == rule && d.severity == Severity::Error)
+    }
+}
+
+/// Build a diagnostic anchored to instruction `iid` of `f`.
+pub(crate) fn diag_at(
+    rule: Rule,
+    severity: Severity,
+    m: &Module,
+    f: &Function,
+    iid: InstrId,
+    msg: String,
+) -> Diagnostic {
+    Diagnostic {
+        rule,
+        severity,
+        func: f.name.clone(),
+        block: f.block_of_instr(iid).map(|b| f.block(b).name.clone()),
+        instr: Some(printer::print_op(m, f, &f.instr(iid).op)),
+        msg,
+    }
+}
+
+/// Build a diagnostic anchored to a function (and optionally a block).
+pub(crate) fn diag_fn(
+    rule: Rule,
+    severity: Severity,
+    f: &Function,
+    block: Option<String>,
+    msg: String,
+) -> Diagnostic {
+    Diagnostic { rule, severity, func: f.name.clone(), block, instr: None, msg }
+}
+
+/// Lint one compiled architecture against the original module.
+///
+/// `orig` must be the module `transform::build` compiled from and
+/// `func_idx` the compiled function — the SC program-order rule needs the
+/// sequential store order of the source. For `Arch::Oracle` the
+/// vs-original checks are skipped (LoD flattening intentionally changes
+/// semantics); the intra-module rules still run.
+pub fn lint_compiled(orig: &Module, func_idx: usize, c: &Compiled) -> LintReport {
+    match c {
+        Compiled::Monolithic { module, .. } => lint_monolithic(module),
+        Compiled::Dae { program, arch, map, .. } => {
+            let orig_pair = if *arch == Arch::Oracle {
+                None
+            } else {
+                Some((orig, &orig.funcs[func_idx]))
+            };
+            lint_dae(orig_pair, program, map.as_ref())
+        }
+    }
+}
+
+/// Lint an STA module: a monolithic function must carry no channel
+/// traffic at all.
+pub fn lint_monolithic(m: &Module) -> LintReport {
+    let mut r = LintReport::default();
+    for f in &m.funcs {
+        slice::check_no_channel_ops(m, f, &mut r);
+    }
+    r
+}
+
+/// Lint a decoupled program. Exposed separately from [`lint_compiled`]
+/// so the fuzz harness can lint deliberately mutated `DaeProgram`s.
+pub fn lint_dae(
+    orig: Option<(&Module, &Function)>,
+    p: &DaeProgram,
+    map: Option<&SpecReqMap>,
+) -> LintReport {
+    let mut r = LintReport::default();
+    slice::check_dae(p, &mut r);
+
+    let agu = p.agu_fn();
+    let cu = p.cu_fn();
+    let shared = paths::shared_branches(agu, cu);
+    let pa = paths::enumerate(&p.module, agu, &shared, &mut r);
+    let pc = paths::enumerate(&p.module, cu, &shared, &mut r);
+    if let (Some(pa), Some(pc)) = (&pa, &pc) {
+        channels::check(p, pa, pc, &mut r);
+        seqcst::check_store_streams(p, pa, pc, &mut r);
+        if let Some(map) = map {
+            taint::check(p, map, pa, pc, &mut r);
+        }
+    }
+
+    if let Some((om, of)) = orig {
+        let shared2 = paths::shared_branches(cu, of);
+        let pc2 = paths::enumerate(&p.module, cu, &shared2, &mut r);
+        let po = paths::enumerate(om, of, &shared2, &mut r);
+        if let (Some(pc2), Some(po)) = (pc2, po) {
+            seqcst::check_program_order(p, om, of, po, pc2, &mut r);
+        }
+    }
+    r
+}

@@ -1,0 +1,493 @@
+//! Per-iteration path summaries over reducible CFGs.
+//!
+//! The balance/ordering rules compare *paths* between the AGU, the CU and
+//! the original function. Those are three different CFGs, but all clones
+//! of one source: surviving blocks keep their names across `decouple`,
+//! hoisting and `simplify_cfg` (which folds and bypasses blocks but never
+//! renames or swaps a `condbr`'s taken/not-taken slots). That shared
+//! naming is what lets two functions' paths be matched without any side
+//! table:
+//!
+//! - the CFG is cut into **regions** — the top level plus one region per
+//!   natural loop (identified by its header's *name*); a region's paths
+//!   describe exactly one iteration, so counts per path are counts per
+//!   iteration;
+//! - inner loops are collapsed to summary nodes (enter at the header,
+//!   leave by each distinct exit target) — their events belong to the
+//!   inner region;
+//! - each path carries a **key**: the branch decisions taken at blocks
+//!   that are genuine two-way branches in *both* functions being
+//!   compared. Branches only one side still has (e.g. a CU guard whose
+//!   AGU twin folded away after hoisting) contribute no key token, which
+//!   is precisely what makes same-key paths on one side comparable: no
+//!   shared branch separates them, so the other side cannot tell them
+//!   apart and their channel traffic must agree.
+//!
+//! Poison steering predicates (Algorithm 3 case 2) are pure
+//! `const.b`/φ networks, so a per-path symbolic boolean environment
+//! resolves them exactly; anything unresolved degrades the affected
+//! event to a "maybe" and the consumers work with count intervals.
+
+use super::{LintReport, Rule, Severity};
+use crate::analysis::{DomTree, LoopInfo};
+use crate::ir::{BlockId, ChanKind, Function, InstrId, Module, Op, Terminator, ValueDef, ValueId};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// Per-region path budget. Regions are single loop iterations, so real
+/// kernels sit far below this; hitting it degrades to a BUDGET info
+/// diagnostic rather than wrong answers.
+pub const PATH_CAP: usize = 2048;
+
+/// What an event on a path is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvKind {
+    /// AGU `send_ld_addr`.
+    SendLd,
+    /// AGU `send_st_addr`.
+    SendSt,
+    /// `consume_val` of a `ld_val` channel (CU-bound value pop).
+    ConsumeCu,
+    /// `consume_val` of a `ld_val_agu` channel (AGU LoD pop).
+    ConsumeAgu,
+    /// CU `produce_val`.
+    Produce,
+    /// CU `poison_val` (definite unless its steering pred is unresolved).
+    Poison,
+    /// `load` in the original function (mem-tagged in layout order).
+    Load,
+    /// `store` in the original function.
+    Store,
+}
+
+/// One channel/memory event observed on a path.
+#[derive(Clone, Copy, Debug)]
+pub struct PathEvent {
+    pub kind: EvKind,
+    /// Static memory-op id (layout order of the original function).
+    pub mem: u32,
+    /// Array the event's channel/memory op refers to.
+    pub arr: u32,
+    pub iid: InstrId,
+    /// False only for `poison_val` whose steering predicate could not be
+    /// resolved on this path.
+    pub definite: bool,
+}
+
+/// A branch-decision token: `"<block>:t"`, `"<block>:f"`, or
+/// `"<header>=><target>"` for the exit taken out of a summarized inner
+/// loop.
+pub type Key = Vec<String>;
+
+#[derive(Clone, Debug)]
+pub struct PathSummary {
+    pub key: Key,
+    pub events: Vec<PathEvent>,
+}
+
+/// All per-iteration paths of one region.
+#[derive(Debug)]
+pub struct RegionPaths {
+    /// Loop-header block name; `None` for the top-level region.
+    pub name: Option<String>,
+    pub paths: Vec<PathSummary>,
+    pub truncated: bool,
+}
+
+/// All regions of one function.
+#[derive(Debug)]
+pub struct FnPaths {
+    pub fname: String,
+    pub regions: Vec<RegionPaths>,
+}
+
+impl FnPaths {
+    pub fn region(&self, name: Option<&str>) -> Option<&RegionPaths> {
+        self.regions.iter().find(|r| r.name.as_deref() == name)
+    }
+}
+
+/// Names of blocks that are genuine two-way branches in both functions.
+pub fn shared_branches(a: &Function, b: &Function) -> HashSet<String> {
+    let branch_names = |f: &Function| -> HashSet<String> {
+        f.blocks
+            .iter()
+            .filter(|bl| matches!(&bl.term, Terminator::CondBr { t, f: fa, .. } if t != fa))
+            .map(|bl| bl.name.clone())
+            .collect()
+    };
+    branch_names(a).intersection(&branch_names(b)).cloned().collect()
+}
+
+/// Mem tags for `load`/`store` instructions of an original (pre-
+/// decoupling) function, in layout order — the same enumeration
+/// `transform::decouple` uses, so tags line up with `MemOpInfo::mem`.
+pub fn original_mem_tags(f: &Function) -> Vec<Option<u32>> {
+    let mut tags = vec![None; f.instrs.len()];
+    let mut next = 0u32;
+    for b in &f.blocks {
+        for &iid in &b.instrs {
+            if f.instr(iid).op.is_memory() {
+                tags[iid.index()] = Some(next);
+                next += 1;
+            }
+        }
+    }
+    tags
+}
+
+/// Enumerate per-iteration path summaries for every region of `f`.
+/// Returns `None` (with a RED error pushed) if the CFG is irreducible —
+/// the transforms' stated precondition, without which regions are not
+/// well defined.
+pub fn enumerate(
+    m: &Module,
+    f: &Function,
+    shared: &HashSet<String>,
+    r: &mut LintReport,
+) -> Option<FnPaths> {
+    let dom = DomTree::new(f);
+    let loops = LoopInfo::new(f, &dom);
+    if !loops.reducible {
+        r.push(super::diag_fn(
+            Rule::Reducible,
+            Severity::Error,
+            f,
+            None,
+            "irreducible control flow: path analysis is not defined".into(),
+        ));
+        return None;
+    }
+    let mem_tags = original_mem_tags(f);
+    let mut regions = Vec::new();
+    {
+        let mut w = Walker { m, f, loops: &loops, region: None, shared, mem_tags: &mem_tags, paths: Vec::new(), truncated: false };
+        w.start(f.entry, false);
+        regions.push(RegionPaths { name: None, paths: w.paths, truncated: w.truncated });
+    }
+    for (li, l) in loops.loops.iter().enumerate() {
+        let mut w = Walker { m, f, loops: &loops, region: Some(li), shared, mem_tags: &mem_tags, paths: Vec::new(), truncated: false };
+        w.start(l.header, true);
+        regions.push(RegionPaths {
+            name: Some(f.block(l.header).name.clone()),
+            paths: w.paths,
+            truncated: w.truncated,
+        });
+    }
+    for reg in regions.iter().filter(|rg| rg.truncated) {
+        r.push(super::diag_fn(
+            Rule::PathBudget,
+            Severity::Info,
+            f,
+            reg.name.clone(),
+            format!("region exceeded {PATH_CAP} paths; its balance checks were skipped"),
+        ));
+    }
+    Some(FnPaths { fname: f.name.clone(), regions })
+}
+
+struct Walker<'a> {
+    m: &'a Module,
+    f: &'a Function,
+    loops: &'a LoopInfo,
+    /// Index into `loops.loops`, or `None` for the top-level region.
+    region: Option<usize>,
+    shared: &'a HashSet<String>,
+    mem_tags: &'a [Option<u32>],
+    paths: Vec<PathSummary>,
+    truncated: bool,
+}
+
+#[derive(Clone, Default)]
+struct PathState {
+    env: HashMap<ValueId, bool>,
+    key: Key,
+    events: Vec<PathEvent>,
+    visited: HashSet<BlockId>,
+}
+
+impl Walker<'_> {
+    fn start(&mut self, b: BlockId, is_loop_header: bool) {
+        let st = PathState::default();
+        if is_loop_header {
+            // A loop region starts at its own header; bypass the
+            // backedge check `enter` would apply.
+            self.step(b, None, st);
+        } else {
+            self.advance(b, st);
+        }
+    }
+
+    fn resolve(&self, env: &HashMap<ValueId, bool>, v: ValueId) -> Option<bool> {
+        if let Some(&b) = env.get(&v) {
+            return Some(b);
+        }
+        if let ValueDef::Instr(iid) = self.f.value(v).def {
+            if let Op::ConstB(b) = self.f.instr(iid).op {
+                return Some(b);
+            }
+        }
+        None
+    }
+
+    /// Process a block known to belong to this region, then fan out.
+    fn step(&mut self, b: BlockId, prev: Option<BlockId>, mut st: PathState) {
+        if self.paths.len() >= PATH_CAP || !st.visited.insert(b) {
+            self.truncated = true;
+            return;
+        }
+        // φ resolution from the taken edge (parallel-assignment
+        // semantics: read the old environment for every φ first).
+        if let Some(p) = prev {
+            let mut updates = Vec::new();
+            for &iid in &self.f.block(b).instrs {
+                let instr = self.f.instr(iid);
+                if let Op::Phi { incomings, .. } = &instr.op {
+                    if let (Some(res), Some(&(_, v))) =
+                        (instr.result, incomings.iter().find(|(pb, _)| *pb == p))
+                    {
+                        if let Some(val) = self.resolve(&st.env, v) {
+                            updates.push((res, val));
+                        }
+                    }
+                }
+            }
+            for (res, val) in updates {
+                st.env.insert(res, val);
+            }
+        }
+        for &iid in &self.f.block(b).instrs {
+            let instr = self.f.instr(iid);
+            let mut ev = |kind: EvKind, mem: u32, arr: u32, definite: bool| {
+                st.events.push(PathEvent { kind, mem, arr, iid, definite });
+            };
+            match &instr.op {
+                Op::ConstB(v) => {
+                    if let Some(res) = instr.result {
+                        st.env.insert(res, *v);
+                    }
+                }
+                Op::Not(a) => {
+                    if let (Some(res), Some(v)) = (instr.result, self.resolve(&st.env, *a)) {
+                        st.env.insert(res, !v);
+                    }
+                }
+                Op::SendLdAddr { chan, mem, .. } => {
+                    ev(EvKind::SendLd, *mem, self.m.chan(*chan).arr.0, true)
+                }
+                Op::SendStAddr { chan, mem, .. } => {
+                    ev(EvKind::SendSt, *mem, self.m.chan(*chan).arr.0, true)
+                }
+                Op::ConsumeVal { chan, mem, .. } => {
+                    let c = self.m.chan(*chan);
+                    let kind = if c.kind == ChanKind::LdValAgu {
+                        EvKind::ConsumeAgu
+                    } else {
+                        EvKind::ConsumeCu
+                    };
+                    ev(kind, *mem, c.arr.0, true)
+                }
+                Op::ProduceVal { chan, mem, .. } => {
+                    ev(EvKind::Produce, *mem, self.m.chan(*chan).arr.0, true)
+                }
+                Op::PoisonVal { chan, mem, pred } => {
+                    let arr = self.m.chan(*chan).arr.0;
+                    match pred.map(|p| self.resolve(&st.env, p)) {
+                        Some(Some(false)) => {} // steered off on this path
+                        None | Some(Some(true)) => ev(EvKind::Poison, *mem, arr, true),
+                        Some(None) => ev(EvKind::Poison, *mem, arr, false),
+                    }
+                }
+                Op::Load { arr, .. } => {
+                    if let Some(mem) = self.mem_tags[iid.index()] {
+                        ev(EvKind::Load, mem, arr.0, true)
+                    }
+                }
+                Op::Store { arr, .. } => {
+                    if let Some(mem) = self.mem_tags[iid.index()] {
+                        ev(EvKind::Store, mem, arr.0, true)
+                    }
+                }
+                _ => {}
+            }
+        }
+        match &self.f.block(b).term {
+            Terminator::Ret | Terminator::Unterminated => self.finish(st),
+            Terminator::Br(t) => self.enter(*t, b, st),
+            Terminator::CondBr { t, f: fb, .. } if t == fb => self.enter(*t, b, st),
+            Terminator::CondBr { cond, t, f: fb } => {
+                let name = &self.f.block(b).name;
+                let keyed = self.shared.contains(name);
+                let arms: Vec<(BlockId, bool)> = match self.resolve(&st.env, *cond) {
+                    Some(true) => vec![(*t, true)],
+                    Some(false) => vec![(*fb, false)],
+                    None => vec![(*t, true), (*fb, false)],
+                };
+                for (succ, taken) in arms {
+                    let mut st2 = st.clone();
+                    if keyed {
+                        st2.key.push(format!("{name}:{}", if taken { 't' } else { 'f' }));
+                    }
+                    self.enter(succ, b, st2);
+                }
+            }
+        }
+    }
+
+    /// Follow the edge into `s`, honouring region boundaries.
+    fn enter(&mut self, s: BlockId, from: BlockId, st: PathState) {
+        if let Some(li) = self.region {
+            let l = &self.loops.loops[li];
+            if s == l.header || !l.contains(s) {
+                // Backedge (one iteration done) or loop exit.
+                self.finish(st);
+                return;
+            }
+        }
+        self.advance_from(s, Some(from), st);
+    }
+
+    /// Entry point that does not apply region-boundary checks (used for
+    /// the region's own start block).
+    fn advance(&mut self, s: BlockId, st: PathState) {
+        self.advance_from(s, None, st);
+    }
+
+    fn advance_from(&mut self, s: BlockId, prev: Option<BlockId>, st: PathState) {
+        if self.loops.innermost_idx(s) == self.region {
+            self.step(s, prev, st);
+            return;
+        }
+        // `s` enters a nested loop: summarize the whole nest directly
+        // under this region and continue from each distinct exit target.
+        let mut li = match self.loops.innermost_idx(s) {
+            Some(li) => li,
+            None => {
+                // Outside every loop while the region is a loop — only
+                // reachable via enter(), which already handled exits.
+                self.finish(st);
+                return;
+            }
+        };
+        while self.loops.loops[li].parent != self.region {
+            match self.loops.loops[li].parent {
+                Some(p) => li = p,
+                None => break,
+            }
+        }
+        let inner = &self.loops.loops[li];
+        let mut targets: BTreeSet<BlockId> = BTreeSet::new();
+        for &u in &inner.blocks {
+            for v in self.f.succs(u) {
+                if !inner.contains(v) {
+                    targets.insert(v);
+                }
+            }
+        }
+        if targets.is_empty() {
+            // Infinite loop: the path never returns to this region.
+            self.finish(st);
+            return;
+        }
+        let multi = targets.len() > 1;
+        let hname = self.f.block(inner.header).name.clone();
+        for v in targets {
+            let mut st2 = st.clone();
+            if multi {
+                st2.key.push(format!("{hname}=>{}", self.f.block(v).name));
+            }
+            // φs at `v` see an edge from inside the summarized loop; the
+            // environment across it is unknown, so pass no predecessor.
+            if let Some(rli) = self.region {
+                let l = &self.loops.loops[rli];
+                if v == l.header || !l.contains(v) {
+                    self.finish(st2);
+                    continue;
+                }
+            }
+            self.advance_from(v, None, st2);
+        }
+    }
+
+    fn finish(&mut self, st: PathState) {
+        if self.paths.len() >= PATH_CAP {
+            self.truncated = true;
+            return;
+        }
+        self.paths.push(PathSummary { key: st.key, events: st.events });
+    }
+}
+
+/// `[lo, hi]` occurrence interval of events matching `pred` on `p`.
+pub fn count_interval(p: &PathSummary, pred: impl Fn(&PathEvent) -> bool) -> (u32, u32) {
+    let mut lo = 0;
+    let mut hi = 0;
+    for e in p.events.iter().filter(|e| pred(e)) {
+        hi += 1;
+        if e.definite {
+            lo += 1;
+        }
+    }
+    (lo, hi)
+}
+
+/// First event matching `pred` on `p`, for diagnostic anchoring.
+pub fn first_event<'a>(
+    p: &'a PathSummary,
+    pred: impl Fn(&PathEvent) -> bool,
+) -> Option<&'a PathEvent> {
+    p.events.iter().find(|e| pred(e))
+}
+
+/// Group a region's paths by key (deterministic order).
+pub fn group_by_key(paths: &[PathSummary]) -> Vec<(Key, Vec<&PathSummary>)> {
+    let mut groups: Vec<(Key, Vec<&PathSummary>)> = Vec::new();
+    for p in paths {
+        match groups.iter_mut().find(|(k, _)| *k == p.key) {
+            Some((_, v)) => v.push(p),
+            None => groups.push((p.key.clone(), vec![p])),
+        }
+    }
+    groups.sort_by(|a, b| a.0.cmp(&b.0));
+    groups
+}
+
+/// Render a key for diagnostics.
+pub fn key_str(k: &Key) -> String {
+    if k.is_empty() {
+        "<any>".to_string()
+    } else {
+        k.join(" ")
+    }
+}
+
+/// Pair up regions of two functions: by header name first, leftovers
+/// zipped in order (clone lineage keeps names aligned; the fallback only
+/// matters if a header was renamed by a CFG cleanup). Regions with no
+/// partner at all come back with `None` on the other side.
+pub fn match_regions<'a>(
+    a: &'a FnPaths,
+    b: &'a FnPaths,
+) -> Vec<(Option<&'a RegionPaths>, Option<&'a RegionPaths>)> {
+    let mut used = vec![false; b.regions.len()];
+    let mut out = Vec::new();
+    let mut a_left = Vec::new();
+    for ra in &a.regions {
+        match b.regions.iter().enumerate().position(|(i, rb)| !used[i] && rb.name == ra.name) {
+            Some(i) => {
+                used[i] = true;
+                out.push((Some(ra), Some(&b.regions[i])));
+            }
+            None => a_left.push(ra),
+        }
+    }
+    let mut b_left: Vec<&RegionPaths> =
+        b.regions.iter().enumerate().filter(|(i, _)| !used[*i]).map(|(_, rg)| rg).collect();
+    for ra in a_left {
+        let rb = if b_left.is_empty() { None } else { Some(b_left.remove(0)) };
+        out.push((Some(ra), rb));
+    }
+    for rb in b_left {
+        out.push((None, Some(rb)));
+    }
+    out
+}

@@ -1,0 +1,206 @@
+//! Rule family SC — sequential-consistency preservation.
+//!
+//! Two layers, matching the paper's §6 argument:
+//!
+//! - **Lemma 6.1 (store-stream pairing)**: the DU pairs the k-th store
+//!   *request* on an array's request stream with the k-th store
+//!   *value/poison* on that array's value stream. Statically this means:
+//!   per region and per shared-branch key, the mem-id sequence of
+//!   `send_st_addr`s in the AGU must equal the mem-id sequence of
+//!   `produce_val`/`poison_val`s in the CU.
+//! - **Theorem 6.2 (program order)**: the CU's committed stores (its
+//!   `produce_val`s — poisons are squashed requests) must appear in the
+//!   sequential program order of the original function, per array and per
+//!   matched path.
+
+use super::paths::{self, EvKind, FnPaths, Key, PathEvent, RegionPaths};
+use super::{diag_at, diag_fn, LintReport, Rule, Severity};
+use crate::ir::{Function, InstrId, Module};
+use crate::transform::DaeProgram;
+use std::collections::BTreeSet;
+
+/// Per key: the mem-id sequence of matching events, skipping paths whose
+/// matching events include an unresolved ("maybe") one. Intra-key
+/// disagreement is reported and the key dropped.
+fn stream_by_key(
+    m: &Module,
+    f: &Function,
+    region: &RegionPaths,
+    filter: &dyn Fn(&PathEvent) -> bool,
+    rule: Rule,
+    what: &str,
+    r: &mut LintReport,
+) -> Vec<(Key, Vec<u32>, Option<InstrId>)> {
+    let mut out = Vec::new();
+    for (key, group) in paths::group_by_key(&region.paths) {
+        let mut rep: Option<(Vec<u32>, Option<InstrId>)> = None;
+        let mut ok = true;
+        for p in &group {
+            let evs: Vec<&PathEvent> = p.events.iter().filter(|e| filter(e)).collect();
+            if evs.iter().any(|e| !e.definite) {
+                continue; // order not statically resolvable on this path
+            }
+            let seq: Vec<u32> = evs.iter().map(|e| e.mem).collect();
+            let sample = evs.first().map(|e| e.iid);
+            match &rep {
+                None => rep = Some((seq, sample)),
+                Some((prev, psample)) if *prev != seq => {
+                    let msg = format!(
+                        "{what}: paths with identical shared-branch decisions [{}] emit \
+                         different store streams {:?} vs {:?}",
+                        paths::key_str(&key),
+                        prev,
+                        seq,
+                    );
+                    match sample.or(*psample) {
+                        Some(iid) => r.push(diag_at(rule, Severity::Error, m, f, iid, msg)),
+                        None => {
+                            r.push(diag_fn(rule, Severity::Error, f, region.name.clone(), msg))
+                        }
+                    }
+                    ok = false;
+                    break;
+                }
+                Some(_) => {}
+            }
+        }
+        if ok {
+            if let Some((seq, sample)) = rep {
+                out.push((key, seq, sample));
+            }
+        }
+    }
+    out
+}
+
+/// Compare two sides' per-key streams (matched keys exactly, unmatched
+/// keys leniently against the whole partner set). Each side carries its
+/// own (module, function) pair for diagnostic rendering.
+#[allow(clippy::too_many_arguments)]
+fn compare_seq_sides(
+    ma: &Module,
+    fa: &Function,
+    sa: &[(Key, Vec<u32>, Option<InstrId>)],
+    mb: &Module,
+    fb: &Function,
+    sb: &[(Key, Vec<u32>, Option<InstrId>)],
+    rule: Rule,
+    what: &str,
+    r: &mut LintReport,
+) {
+    let mut one_side = |ours: &[(Key, Vec<u32>, Option<InstrId>)],
+                        theirs: &[(Key, Vec<u32>, Option<InstrId>)],
+                        m: &Module,
+                        f: &Function,
+                        r: &mut LintReport| {
+        for (key, seq, sample) in ours {
+            let verdict = match theirs.iter().find(|(k, _, _)| k == key) {
+                Some((_, oseq, _)) => oseq == seq,
+                None if theirs.is_empty() => seq.is_empty(),
+                None => theirs.iter().any(|(_, oseq, _)| oseq == seq),
+            };
+            if !verdict {
+                let msg = format!(
+                    "{what}: on paths [{}] this side's store stream is {:?}, which no \
+                     matching partner path emits",
+                    paths::key_str(key),
+                    seq,
+                );
+                match sample {
+                    Some(iid) => r.push(diag_at(rule, Severity::Error, m, f, *iid, msg)),
+                    None => r.push(diag_fn(rule, Severity::Error, f, None, msg)),
+                }
+            }
+        }
+    };
+    one_side(sa, sb, ma, fa, r);
+    one_side(sb, sa, mb, fb, r);
+}
+
+/// Lemma 6.1: AGU store-request order vs CU store-value/poison order,
+/// per array, per region, per key.
+pub fn check_store_streams(p: &DaeProgram, pa: &FnPaths, pc: &FnPaths, r: &mut LintReport) {
+    let m = &p.module;
+    let agu = p.agu_fn();
+    let cu = p.cu_fn();
+    let store_arrs: BTreeSet<u32> =
+        p.mem_ops.iter().filter(|mo| mo.is_store).map(|mo| mo.arr.0).collect();
+    for (ra, rc) in paths::match_regions(pa, pc) {
+        let (ra, rc) = match (ra, rc) {
+            (Some(ra), Some(rc)) => (ra, rc),
+            _ => continue, // missing region: CHAN already covers counts
+        };
+        if ra.truncated || rc.truncated {
+            continue;
+        }
+        for &arr in &store_arrs {
+            let what = format!("store-order (Lemma 6.1) on array {arr}");
+            let sa = stream_by_key(
+                m,
+                agu,
+                ra,
+                &|e| e.kind == EvKind::SendSt && e.arr == arr,
+                Rule::SeqCst,
+                &what,
+                r,
+            );
+            let sc = stream_by_key(
+                m,
+                cu,
+                rc,
+                &|e| matches!(e.kind, EvKind::Produce | EvKind::Poison) && e.arr == arr,
+                Rule::SeqCst,
+                &what,
+                r,
+            );
+            compare_seq_sides(m, agu, &sa, m, cu, &sc, Rule::SeqCst, &what, r);
+        }
+    }
+}
+
+/// Theorem 6.2: the CU's produce order equals the original function's
+/// sequential store order, per array, per matched path.
+pub fn check_program_order(
+    p: &DaeProgram,
+    om: &Module,
+    of: &Function,
+    po: FnPaths,
+    pc: FnPaths,
+    r: &mut LintReport,
+) {
+    let m = &p.module;
+    let cu = p.cu_fn();
+    let store_arrs: BTreeSet<u32> =
+        p.mem_ops.iter().filter(|mo| mo.is_store).map(|mo| mo.arr.0).collect();
+    for (ro, rc) in paths::match_regions(&po, &pc) {
+        let (ro, rc) = match (ro, rc) {
+            (Some(ro), Some(rc)) => (ro, rc),
+            _ => continue,
+        };
+        if ro.truncated || rc.truncated {
+            continue;
+        }
+        for &arr in &store_arrs {
+            let what = format!("program order (Theorem 6.2) on array {arr}");
+            let so = stream_by_key(
+                om,
+                of,
+                ro,
+                &|e| e.kind == EvKind::Store && e.arr == arr,
+                Rule::SeqCst,
+                &what,
+                r,
+            );
+            let sc = stream_by_key(
+                m,
+                cu,
+                rc,
+                &|e| e.kind == EvKind::Produce && e.arr == arr,
+                Rule::SeqCst,
+                &what,
+                r,
+            );
+            compare_seq_sides(om, of, &so, m, cu, &sc, Rule::SeqCst, &what, r);
+        }
+    }
+}

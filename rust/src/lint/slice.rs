@@ -1,0 +1,186 @@
+//! Rule family DEC — decoupling legality.
+//!
+//! After `decouple` (and any amount of hoisting/cleanup) the access
+//! slice must contain only address-generation work and the execute slice
+//! only value work; a raw `load`/`store` or a misdirected channel op in
+//! either slice means decoupling was silently lost. Loss-of-decoupling
+//! consumes in the AGU are legal (that is what `ld_val_agu` channels are
+//! for) but worth surfacing: each send whose backward slice
+//! (`analysis/defuse.rs`, with the Definition 4.1 φ-terminator
+//! refinement) or control dependences (`analysis/control_dep.rs`) reach
+//! a consumed value is attributed to that LoD chain as an Info
+//! diagnostic.
+
+use super::{diag_at, LintReport, Rule, Severity};
+use crate::analysis::{ControlDeps, DefUse};
+use crate::ir::{ChanId, ChanKind, Function, InstrId, Module, Op, Terminator, ValueId};
+use std::collections::HashSet;
+
+/// A monolithic (STA) function must carry no channel traffic at all.
+pub fn check_no_channel_ops(m: &Module, f: &Function, r: &mut LintReport) {
+    for b in &f.blocks {
+        for &iid in &b.instrs {
+            if matches!(
+                f.instr(iid).op,
+                Op::SendLdAddr { .. }
+                    | Op::SendStAddr { .. }
+                    | Op::ConsumeVal { .. }
+                    | Op::ProduceVal { .. }
+                    | Op::PoisonVal { .. }
+            ) {
+                r.push(diag_at(
+                    Rule::Decouple,
+                    Severity::Error,
+                    m,
+                    f,
+                    iid,
+                    "channel intrinsic in a monolithic (STA) function".into(),
+                ));
+            }
+        }
+    }
+}
+
+pub fn check_dae(p: &crate::transform::DaeProgram, r: &mut LintReport) {
+    let m = &p.module;
+    let agu = p.agu_fn();
+    let cu = p.cu_fn();
+
+    // -- op classes ---------------------------------------------------------
+    for b in &agu.blocks {
+        for &iid in &b.instrs {
+            let bad: Option<&str> = match &agu.instr(iid).op {
+                Op::Load { .. } | Op::Store { .. } => {
+                    Some("raw memory op survived decoupling in the access slice")
+                }
+                Op::ProduceVal { .. } => Some("store value produced in the access slice"),
+                Op::PoisonVal { .. } => Some("poison issued from the access slice"),
+                Op::ConsumeVal { chan, .. } if m.chan(*chan).kind != ChanKind::LdValAgu => {
+                    Some("access slice pops a CU-bound value channel")
+                }
+                _ => None,
+            };
+            if let Some(msg) = bad {
+                r.push(diag_at(Rule::Decouple, Severity::Error, m, agu, iid, msg.into()));
+            }
+        }
+    }
+    for b in &cu.blocks {
+        for &iid in &b.instrs {
+            let bad: Option<&str> = match &cu.instr(iid).op {
+                Op::Load { .. } | Op::Store { .. } => {
+                    Some("raw memory op survived decoupling in the execute slice")
+                }
+                Op::SendLdAddr { .. } | Op::SendStAddr { .. } => {
+                    Some("request traffic issued from the execute slice")
+                }
+                Op::ConsumeVal { chan, .. } if m.chan(*chan).kind != ChanKind::LdVal => {
+                    Some("execute slice pops a non-ld_val channel")
+                }
+                Op::ProduceVal { chan, .. } | Op::PoisonVal { chan, .. }
+                    if m.chan(*chan).kind != ChanKind::StVal =>
+                {
+                    Some("store value pushed on a non-st_val channel")
+                }
+                _ => None,
+            };
+            if let Some(msg) = bad {
+                r.push(diag_at(Rule::Decouple, Severity::Error, m, cu, iid, msg.into()));
+            }
+        }
+    }
+
+    // -- double consumers ---------------------------------------------------
+    // A FIFO has exactly one popper: the same (chan, mem) consumed in both
+    // slices would race for elements.
+    let consumed = |f: &Function| -> HashSet<(ChanId, u32)> {
+        let mut s = HashSet::new();
+        for b in &f.blocks {
+            for &iid in &b.instrs {
+                if let Op::ConsumeVal { chan, mem, .. } = f.instr(iid).op {
+                    s.insert((chan, mem));
+                }
+            }
+        }
+        s
+    };
+    let agu_pops = consumed(agu);
+    for b in &cu.blocks {
+        for &iid in &b.instrs {
+            if let Op::ConsumeVal { chan, mem, .. } = cu.instr(iid).op {
+                if agu_pops.contains(&(chan, mem)) {
+                    r.push(diag_at(
+                        Rule::Decouple,
+                        Severity::Error,
+                        m,
+                        cu,
+                        iid,
+                        format!("channel {chan}:m{mem} popped by both slices"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // -- LoD attribution + dead consumes ------------------------------------
+    let du = DefUse::new(agu);
+    let cd = ControlDeps::new(agu);
+    let mut consumes: Vec<(InstrId, ValueId, u32)> = Vec::new();
+    for b in &agu.blocks {
+        for &iid in &b.instrs {
+            if let Op::ConsumeVal { mem, .. } = agu.instr(iid).op {
+                if let Some(res) = agu.instr(iid).result {
+                    consumes.push((iid, res, mem));
+                }
+            }
+        }
+    }
+    for &(iid, res, mem) in &consumes {
+        if du.users(res).is_empty() && du.term_users(res).is_empty() {
+            r.push(diag_at(
+                Rule::Decouple,
+                Severity::Warn,
+                m,
+                agu,
+                iid,
+                format!("consumed LoD value m{mem} is never used — spurious blocking pop"),
+            ));
+        }
+    }
+    if !consumes.is_empty() {
+        for (bi, b) in agu.blocks.iter().enumerate() {
+            for &iid in &b.instrs {
+                let (idx, mem) = match agu.instr(iid).op {
+                    Op::SendLdAddr { idx, mem, .. } => (idx, mem),
+                    Op::SendStAddr { idx, mem, .. } => (idx, mem),
+                    _ => continue,
+                };
+                // Data slice of the address plus the conditions of every
+                // branch the send's block is control-dependent on.
+                let mut roots = vec![idx];
+                for ctrl in cd.transitive(crate::ir::BlockId(bi as u32)) {
+                    if let Terminator::CondBr { cond, .. } = agu.block(ctrl).term {
+                        roots.push(cond);
+                    }
+                }
+                let bslice: HashSet<InstrId> =
+                    du.backward_slice(agu, &roots, true).into_iter().collect();
+                for &(cid, _, cmem) in &consumes {
+                    if bslice.contains(&cid) {
+                        r.push(diag_at(
+                            Rule::Decouple,
+                            Severity::Info,
+                            m,
+                            agu,
+                            iid,
+                            format!(
+                                "send for m{mem} depends on the consumed value of m{cmem} \
+                                 (loss-of-decoupling chain)"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Rule family POISON — poison soundness for speculated memory ops.
+//!
+//! Two obligations, both specific to SPEC builds (a `SpecReqMap` exists):
+//!
+//! - **Coverage**: every speculatively hoisted store must receive exactly
+//!   one store value *or poison* per hoisted request, on every path —
+//!   the per-mem shadow of the DU's Lemma 6.1 pairing. This is what the
+//!   fuzzer's `DropPoison` mutation breaks: the path that should poison
+//!   falls to zero pushes while its shared-key siblings still push one.
+//! - **Guardedness (forward taint)**: a speculated load's value is popped
+//!   at the hoist site, i.e. possibly on paths where the original
+//!   program never executed the load (an over-read). Such a value is
+//!   architecturally meaningful only once control reaches the load's
+//!   original home block (`SpecReq::true_bb`). The taint walk
+//!   (`analysis/defuse.rs` forward slice from each speculative consume)
+//!   therefore requires every sink to be unreachable from the consume
+//!   without passing the home block: reaching a `produce_val` that way is
+//!   an error (a possibly-bogus value can commit), steering a branch
+//!   that way is a warning (control mis-steering is recoverable only if
+//!   every store behind it is itself poison-covered).
+
+use super::channels::check_balance;
+use super::paths::{self, EvKind, FnPaths};
+use super::{diag_at, LintReport, Rule, Severity};
+use crate::analysis::DefUse;
+use crate::ir::{BlockId, Function, InstrId, Op, ValueId};
+use crate::transform::{DaeProgram, SpecReqMap};
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// Is `target` reachable from `start` on any CFG path that never enters
+/// `avoid`? (`target == avoid` is therefore always false.)
+fn reaches_avoiding(f: &Function, start: BlockId, target: BlockId, avoid: BlockId) -> bool {
+    if start == avoid || target == avoid {
+        return start == target && start != avoid;
+    }
+    if start == target {
+        return true;
+    }
+    let mut seen = vec![false; f.num_blocks()];
+    let mut q = VecDeque::from([start]);
+    seen[start.index()] = true;
+    while let Some(b) = q.pop_front() {
+        for s in f.succs(b) {
+            if s == avoid || seen[s.index()] {
+                continue;
+            }
+            if s == target {
+                return true;
+            }
+            seen[s.index()] = true;
+            q.push_back(s);
+        }
+    }
+    false
+}
+
+pub fn check(p: &DaeProgram, map: &SpecReqMap, pa: &FnPaths, pc: &FnPaths, r: &mut LintReport) {
+    let m = &p.module;
+    let agu = p.agu_fn();
+    let cu = p.cu_fn();
+
+    let mut spec_stores: Vec<u32> = Vec::new();
+    let mut spec_loads: HashMap<u32, BlockId> = HashMap::new();
+    for (_, reqs) in map.iter() {
+        for req in reqs {
+            if req.is_store {
+                spec_stores.push(req.mem);
+            } else {
+                spec_loads.insert(req.mem, req.true_bb);
+            }
+        }
+    }
+
+    // -- coverage: per speculated store, requests vs values+poisons ---------
+    for &smem in &spec_stores {
+        for (ra, rc) in paths::match_regions(pa, pc) {
+            check_balance(
+                m,
+                agu,
+                ra,
+                cu,
+                rc,
+                &|e| e.kind == EvKind::SendSt && e.mem == smem,
+                &|e| matches!(e.kind, EvKind::Produce | EvKind::Poison) && e.mem == smem,
+                Rule::PoisonSound,
+                &format!("speculated store m{smem} (hoisted requests vs values+poisons)"),
+                r,
+            );
+        }
+    }
+
+    // -- guardedness: forward taint from speculative consumes ---------------
+    let du = DefUse::new(cu);
+    for b in &cu.blocks {
+        for &iid in &b.instrs {
+            let (mem, res) = match (&cu.instr(iid).op, cu.instr(iid).result) {
+                (Op::ConsumeVal { mem, .. }, Some(res)) => (*mem, res),
+                _ => continue,
+            };
+            let Some(&home) = spec_loads.get(&mem) else { continue };
+            let Some(cb) = cu.block_of_instr(iid) else { continue };
+            if cb == home {
+                continue; // consume still at the load's home: never early
+            }
+            let tainted_instrs = du.forward_slice(cu, &[res]);
+            let mut tainted_vals: Vec<ValueId> = vec![res];
+            tainted_vals.extend(tainted_instrs.iter().filter_map(|&ti| cu.instr(ti).result));
+            let tainted_set: HashSet<InstrId> = tainted_instrs.iter().copied().collect();
+
+            // Value sinks: a produce_val built from the speculative value.
+            for &ti in &tainted_set {
+                if !matches!(cu.instr(ti).op, Op::ProduceVal { .. }) {
+                    continue;
+                }
+                let Some(x) = cu.block_of_instr(ti) else { continue };
+                if reaches_avoiding(cu, cb, x, home) {
+                    r.push(diag_at(
+                        Rule::PoisonSound,
+                        Severity::Error,
+                        m,
+                        cu,
+                        ti,
+                        format!(
+                            "speculatively consumed value of load m{mem} can reach this \
+                             store value without passing the load's home block `{}`",
+                            cu.block(home).name
+                        ),
+                    ));
+                }
+            }
+            // Control sinks: a branch steered by the speculative value.
+            let mut warned: HashSet<BlockId> = HashSet::new();
+            for &v in &tainted_vals {
+                for &x in du.term_users(v) {
+                    if warned.contains(&x) || !reaches_avoiding(cu, cb, x, home) {
+                        continue;
+                    }
+                    warned.insert(x);
+                    r.push(super::diag_fn(
+                        Rule::PoisonSound,
+                        Severity::Warn,
+                        cu,
+                        Some(cu.block(x).name.clone()),
+                        format!(
+                            "branch steered by the speculatively consumed value of load \
+                             m{mem} on a path that avoids its home block `{}`",
+                            cu.block(home).name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}

@@ -348,6 +348,16 @@ impl SimCtx<'_> {
         self.cfg.mem_write_lat + self.fault().map_or(0, |f| f.mem_write_extra(t))
     }
 
+    /// Extra STA read-port busy cycles at `t` (fault injection).
+    fn sta_rd_port_extra(&self, t: u64) -> u64 {
+        self.fault().map_or(0, |f| f.sta_read_port_extra(t))
+    }
+
+    /// Extra STA write-port busy cycles at `t` (fault injection).
+    fn sta_wr_port_extra(&self, t: u64) -> u64 {
+        self.fault().map_or(0, |f| f.sta_write_port_extra(t))
+    }
+
     /// Effective LSQ load-queue size at `t` (fault squeeze, floor 1).
     fn eff_ld_q(&self, t: u64) -> usize {
         self.fault().map_or(self.cfg.ld_q, |f| f.ld_q(self.cfg.ld_q, t))
@@ -604,7 +614,8 @@ impl<'a> Unit<'a> {
                     let barrier = self.sta_store_commit[arr as usize];
                     let port = self.sta_read_port[arr as usize];
                     let t_issue = tv!(idx).max(self.t_ctrl).max(barrier).max(port);
-                    self.sta_read_port[arr as usize] = t_issue + 1;
+                    self.sta_read_port[arr as usize] =
+                        t_issue + 1 + ctx.sta_rd_port_extra(t_issue);
                     let t_done = t_issue + ctx.read_lat(t_issue);
                     ctx.bump(t_done);
                     if let Some(tr) = &mut ctx.trace {
@@ -626,7 +637,8 @@ impl<'a> Unit<'a> {
                     }
                     let port = self.sta_write_port[arr as usize];
                     let t_w = tv!(idx).max(tv!(val)).max(self.t_ctrl).max(port);
-                    self.sta_write_port[arr as usize] = t_w + 1;
+                    self.sta_write_port[arr as usize] =
+                        t_w + 1 + ctx.sta_wr_port_extra(t_w);
                     let t_commit = t_w + ctx.write_lat(t_w);
                     ctx.memory[arr as usize][i as usize] = v;
                     ctx.commit_log.push((0, i, v));

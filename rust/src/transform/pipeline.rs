@@ -99,7 +99,27 @@ impl Compiled {
 }
 
 /// Compile `(m, f)` — `f` must be `m.funcs[func_idx]` — for `arch`.
+///
+/// Debug builds additionally run the semantic linter (`crate::lint`) on
+/// the result, the way `verify_module` already runs inside each arm:
+/// any Error-severity diagnostic fails the build.
 pub fn build(m: &Module, func_idx: usize, arch: Arch) -> Result<Compiled> {
+    let compiled = build_unchecked(m, func_idx, arch)?;
+    #[cfg(debug_assertions)]
+    {
+        let rep = crate::lint::lint_compiled(m, func_idx, &compiled);
+        if rep.has_errors() {
+            anyhow::bail!(
+                "semantic lint failed after {} build:\n{}",
+                arch.name(),
+                rep.render(crate::lint::Severity::Error)
+            );
+        }
+    }
+    Ok(compiled)
+}
+
+fn build_unchecked(m: &Module, func_idx: usize, arch: Arch) -> Result<Compiled> {
     let f = &m.funcs[func_idx];
     match arch {
         Arch::Sta => {

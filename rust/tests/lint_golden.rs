@@ -1,0 +1,415 @@
+//! Golden tests for the semantic linter (`dae_spec::lint`): one
+//! positive + one negative hand-written IR snippet per rule family,
+//! parsed with `ir::parser`, plus the static/dynamic cross-validation —
+//! an IR-level semantic mutation (dropped poison, dropped store push)
+//! of a real SPEC build must be flagged *before* any simulation.
+
+use dae_spec::ir::parser::parse_module;
+use dae_spec::ir::{BlockId, Module};
+use dae_spec::lint::{lint_dae, Rule, Severity};
+use dae_spec::transform::decouple::MemOpInfo;
+use dae_spec::transform::{
+    build, Arch, Compiled, DaeProgram, SpecReq, SpecReqMap,
+};
+
+/// Wrap a parsed two-function module (funcs[0] = AGU, funcs[1] = CU)
+/// into a `DaeProgram` with the given memory-op table.
+fn dae(m: Module, mem_ops: Vec<MemOpInfo>, agu_consumes: Vec<u32>, cu_consumes: Vec<u32>) -> DaeProgram {
+    DaeProgram { module: m, agu: 0, cu: 1, mem_ops, agu_consumes, cu_consumes }
+}
+
+fn block_named(p: &DaeProgram, fi: usize, name: &str) -> BlockId {
+    let f = &p.module.funcs[fi];
+    BlockId(f.blocks.iter().position(|b| b.name == name).unwrap() as u32)
+}
+
+fn store_op(mem: u32) -> MemOpInfo {
+    MemOpInfo { mem, is_store: true, arr: dae_spec::ir::ArrayId(0), home: BlockId(0) }
+}
+
+fn load_op(mem: u32) -> MemOpInfo {
+    MemOpInfo { mem, is_store: false, arr: dae_spec::ir::ArrayId(0), home: BlockId(0) }
+}
+
+// ---------------------------------------------------------------- DEC --
+
+#[test]
+fn dec_flags_raw_load_in_access_slice() {
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : st_addr @A
+chan ch1 : st_val @A
+
+func @bad__agu(%n: i64) {
+entry:
+  %c0 = const.i 0
+  %v = load @A[%c0]
+  send_st_addr ch0:m1, %c0
+  ret
+}
+func @bad__cu(%n: i64) {
+entry:
+  %c1 = const.i 1
+  produce_val ch1:m1, %c1
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![load_op(0), store_op(1)], vec![], vec![]);
+    let rep = lint_dae(None, &p, None);
+    assert!(rep.has_error_for(Rule::Decouple), "expected DEC error:\n{}", rep.render(Severity::Info));
+    let d = rep.diags.iter().find(|d| d.rule == Rule::Decouple).unwrap();
+    assert_eq!(d.func, "bad__agu");
+    assert!(d.instr.as_deref().unwrap_or("").contains("load"), "instr not named: {d:?}");
+}
+
+#[test]
+fn dec_accepts_clean_slices() {
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : st_addr @A
+chan ch1 : st_val @A
+
+func @ok__agu(%n: i64) {
+entry:
+  %c0 = const.i 0
+  send_st_addr ch0:m0, %c0
+  ret
+}
+func @ok__cu(%n: i64) {
+entry:
+  %c1 = const.i 1
+  produce_val ch1:m0, %c1
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![store_op(0)], vec![], vec![]);
+    let rep = lint_dae(None, &p, None);
+    assert!(!rep.has_errors(), "clean pair must lint clean:\n{}", rep.render(Severity::Info));
+}
+
+// --------------------------------------------------------------- CHAN --
+
+#[test]
+fn chan_flags_produce_missing_on_one_path() {
+    // The AGU sends one store request unconditionally; the CU produces a
+    // value only on one arm of a branch the AGU does not have. The two CU
+    // paths share every AGU-visible decision, so the counts 1 vs 0 are
+    // un-mirrorable.
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : st_addr @A
+chan ch1 : st_val @A
+
+func @k__agu(%n: i64) {
+entry:
+  %c0 = const.i 0
+  send_st_addr ch0:m0, %c0
+  ret
+}
+func @k__cu(%n: i64) {
+entry:
+  %z = const.i 0
+  %p = icmp.lt %z, %n
+  condbr %p, yes, exit
+yes:
+  %c1 = const.i 1
+  produce_val ch1:m0, %c1
+  br exit
+exit:
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![store_op(0)], vec![], vec![]);
+    let rep = lint_dae(None, &p, None);
+    assert!(rep.has_error_for(Rule::ChanBalance), "expected CHAN error:\n{}", rep.render(Severity::Info));
+}
+
+#[test]
+fn chan_accepts_branch_mirrored_in_both_slices() {
+    // Same guarded store, but the branch exists in both slices (same
+    // block names), so paths match key-for-key and balance.
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : st_addr @A
+chan ch1 : st_val @A
+
+func @k__agu(%n: i64) {
+entry:
+  %z = const.i 0
+  %p = icmp.lt %z, %n
+  condbr %p, yes, exit
+yes:
+  send_st_addr ch0:m0, %z
+  br exit
+exit:
+  ret
+}
+func @k__cu(%n: i64) {
+entry:
+  %z = const.i 0
+  %p = icmp.lt %z, %n
+  condbr %p, yes, exit
+yes:
+  %c1 = const.i 1
+  produce_val ch1:m0, %c1
+  br exit
+exit:
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![store_op(0)], vec![], vec![]);
+    let rep = lint_dae(None, &p, None);
+    assert!(!rep.has_errors(), "mirrored guard must lint clean:\n{}", rep.render(Severity::Info));
+}
+
+// ------------------------------------------------------------- POISON --
+
+fn spec_pair() -> (DaeProgram, SpecReqMap) {
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : ld_addr @A
+chan ch1 : ld_val @A
+chan ch2 : st_addr @A
+chan ch3 : st_val @A
+
+func @s__agu(%n: i64) {
+entry:
+  %z = const.i 0
+  send_ld_addr ch0:m0, %z
+  send_st_addr ch2:m1, %z
+  ret
+}
+func @s__cu(%n: i64) {
+entry:
+  %v = consume_val ch1:m0
+  %z = const.i 0
+  %p = icmp.lt %z, %n
+  condbr %p, home, skip
+home:
+  br join
+skip:
+  br join
+join:
+  produce_val ch3:m1, %v
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![load_op(0), store_op(1)], vec![], vec![0]);
+    let home = block_named(&p, 1, "home");
+    let entry = block_named(&p, 1, "entry");
+    let map: SpecReqMap = vec![(
+        entry,
+        vec![SpecReq { mem: 0, is_store: false, arr: dae_spec::ir::ArrayId(0), true_bb: home }],
+    )];
+    (p, map)
+}
+
+#[test]
+fn poison_flags_unguarded_speculative_value() {
+    // The CU pops the speculated load at `entry` (before the guard) and
+    // feeds it to a store value reachable via `skip`, i.e. without ever
+    // passing the load's home block — the classic over-read escape.
+    let (p, map) = spec_pair();
+    let rep = lint_dae(None, &p, Some(&map));
+    assert!(rep.has_error_for(Rule::PoisonSound), "expected POISON error:\n{}", rep.render(Severity::Info));
+}
+
+#[test]
+fn poison_accepts_consume_at_home_block() {
+    // Same shape, but the speculative pop happens at the home block
+    // itself: the value only exists where the original load executed.
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : ld_addr @A
+chan ch1 : ld_val @A
+chan ch2 : st_addr @A
+chan ch3 : st_val @A
+
+func @s2__agu(%n: i64) {
+entry:
+  %z = const.i 0
+  %p = icmp.lt %z, %n
+  condbr %p, home, join
+home:
+  send_ld_addr ch0:m0, %z
+  send_st_addr ch2:m1, %z
+  br join
+join:
+  ret
+}
+func @s2__cu(%n: i64) {
+entry:
+  %z = const.i 0
+  %p = icmp.lt %z, %n
+  condbr %p, home, join
+home:
+  %v = consume_val ch1:m0
+  produce_val ch3:m1, %v
+  br join
+join:
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![load_op(0), store_op(1)], vec![], vec![0]);
+    let home = block_named(&p, 1, "home");
+    let map: SpecReqMap = vec![(
+        home,
+        vec![SpecReq { mem: 0, is_store: false, arr: dae_spec::ir::ArrayId(0), true_bb: home }],
+    )];
+    let rep = lint_dae(None, &p, Some(&map));
+    assert!(!rep.has_errors(), "guarded consume must lint clean:\n{}", rep.render(Severity::Info));
+}
+
+// ----------------------------------------------------------------- SC --
+
+#[test]
+fn sc_flags_swapped_store_order() {
+    // Two stores to one array: the AGU requests m0 then m1, the CU
+    // produces m1 then m0 — Lemma 6.1 pairing would commit swapped
+    // values.
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : st_addr @A
+chan ch1 : st_val @A
+
+func @o__agu(%n: i64) {
+entry:
+  %c0 = const.i 0
+  send_st_addr ch0:m0, %c0
+  send_st_addr ch0:m1, %c0
+  ret
+}
+func @o__cu(%n: i64) {
+entry:
+  %c1 = const.i 1
+  produce_val ch1:m1, %c1
+  produce_val ch1:m0, %c1
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![store_op(0), store_op(1)], vec![], vec![]);
+    let rep = lint_dae(None, &p, None);
+    assert!(rep.has_error_for(Rule::SeqCst), "expected SC error:\n{}", rep.render(Severity::Info));
+}
+
+#[test]
+fn sc_accepts_matching_store_order() {
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+chan ch0 : st_addr @A
+chan ch1 : st_val @A
+
+func @o__agu(%n: i64) {
+entry:
+  %c0 = const.i 0
+  send_st_addr ch0:m0, %c0
+  send_st_addr ch0:m1, %c0
+  ret
+}
+func @o__cu(%n: i64) {
+entry:
+  %c1 = const.i 1
+  produce_val ch1:m0, %c1
+  produce_val ch1:m1, %c1
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![store_op(0), store_op(1)], vec![], vec![]);
+    let rep = lint_dae(None, &p, None);
+    assert!(!rep.has_errors(), "in-order streams must lint clean:\n{}", rep.render(Severity::Info));
+}
+
+// ---------------------------------------------------------------- RED --
+
+#[test]
+fn red_flags_irreducible_slice() {
+    // An a <-> b cycle entered from both sides has no natural-loop
+    // decomposition; the path analysis must refuse it loudly instead of
+    // reporting wrong balance.
+    let m = parse_module(
+        r#"
+array @A : i64[8]
+
+func @irr__agu(%n: i64) {
+entry:
+  %z = const.i 0
+  %p = icmp.lt %z, %n
+  condbr %p, a, b
+a:
+  br b
+b:
+  br a
+}
+func @irr__cu(%n: i64) {
+entry:
+  ret
+}
+"#,
+    )
+    .unwrap();
+    let p = dae(m, vec![], vec![], vec![]);
+    let rep = lint_dae(None, &p, None);
+    assert!(rep.has_error_for(Rule::Reducible), "expected RED error:\n{}", rep.render(Severity::Info));
+}
+
+// ----------------------------------------- static/dynamic cross-check --
+
+#[test]
+fn spec_mutations_are_flagged_statically() {
+    // Every IR-level semantic mutation the fuzz harness can inject into
+    // hist's SPEC build must be caught by the linter with no simulation.
+    let misses = dae_spec::fault::lint_cross_validate("hist", 2026, false).unwrap();
+    assert!(misses.is_empty(), "mutations escaped the linter: {misses:?}");
+}
+
+#[test]
+fn dropped_poison_yields_structured_diagnostic() {
+    use dae_spec::fault::{apply_semantic_mutation, SemanticMutation};
+    // Find a paper kernel whose SPEC build carries a poison call, drop
+    // it, and require an Error diagnostic naming rule, function and
+    // instruction — the acceptance shape for `dae-spec lint`.
+    let mut exercised = false;
+    for kernel in dae_spec::workloads::PAPER_KERNELS {
+        let w = dae_spec::coordinator::build_workload(kernel, 2026, None).unwrap();
+        let c = build(&w.module, 0, Arch::Spec).unwrap();
+        let Compiled::Dae { program, map, .. } = &c else { panic!("SPEC is decoupled") };
+        let mut p = program.clone();
+        if apply_semantic_mutation(&mut p, SemanticMutation::DropPoison).is_none() {
+            continue; // this kernel's SPEC build needed no poisons
+        }
+        exercised = true;
+        let rep = lint_dae(Some((&w.module, &w.module.funcs[0])), &p, map.as_ref());
+        assert!(rep.has_errors(), "{kernel}: dropped poison not flagged");
+        let d = rep
+            .diags
+            .iter()
+            .find(|d| d.severity == Severity::Error && d.instr.is_some())
+            .unwrap_or_else(|| panic!("{kernel}: no instruction-anchored error diagnostic"));
+        assert!(!d.func.is_empty(), "{kernel}: diagnostic names no function");
+    }
+    assert!(exercised, "no paper kernel produced a poison call in its SPEC build");
+}
