@@ -1,15 +1,29 @@
 //! `dae-spec bench` — host-side simulator throughput harness.
 //!
-//! Compiles each kernel × arch cell once, validates it with a first
-//! simulation (reference-checked timing inputs come from the workload
-//! builders), then times repeated `simulate` calls with [`Bench`].
-//! Results go to `BENCH_sim.json` (schema `dae-spec-bench/v1`); pass
+//! Two phases per kernel × arch cell:
+//!
+//! 1. **Compile + validate** (parallel across cells, `--jobs N`, all
+//!    cores by default): build the workload, compile, and run once so a
+//!    cell that stalls or errors fails the harness before any timing.
+//! 2. **Timing** (serial by default): repeated runs through one reused
+//!    [`SimSession`] per cell, so the timed region contains only the
+//!    machine — per-run buffer allocation and the old per-iteration
+//!    `w.memory.clone()` are gone. `--time-jobs N` opts into timing
+//!    cells concurrently; co-running cells contend for cores and
+//!    inflate wall times, so never gate regressions on those numbers.
+//!
+//! Results go to `BENCH_sim.json` (schema `dae-spec-bench/v2`, which
+//! adds `median_ns`; the baseline reader still accepts v1). Pass
 //! `--baseline BENCH_sim.json --max-regress 10` to fail when a cell's
-//! best time regresses by more than the given percentage.
+//! best time regresses by more than the given percentage, or
+//! `--refresh-baseline` to rewrite the baseline from this run.
 
-use crate::sim::MachineConfig;
-use crate::transform::build;
+use crate::sim::{MachineConfig, SimSession};
+use crate::transform::{build, Arch, Compiled};
+use crate::util::bench::BenchStats;
+use crate::util::pool::parallel_map;
 use crate::util::{Args, Bench, Json};
+use crate::workloads::Workload;
 use anyhow::{bail, Context, Result};
 
 struct Cell {
@@ -18,6 +32,17 @@ struct Cell {
     mean_ns: f64,
     stddev_ns: f64,
     min_ns: f64,
+    median_ns: f64,
+    cycles: u64,
+    dyn_instrs: u64,
+}
+
+/// A compiled + validated cell, ready for the timing phase.
+struct Prepared {
+    kernel: String,
+    arch: &'static str,
+    w: Workload,
+    c: Compiled,
     cycles: u64,
     dyn_instrs: u64,
 }
@@ -35,37 +60,90 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
 
     let bench = Bench::new(warmup, samples);
     let cfg = MachineConfig::default();
-    let mut cells: Vec<Cell> = Vec::new();
-    let mut total_instrs = 0.0;
-    let mut total_secs = 0.0;
 
-    for kernel in &kernels {
+    // phase 1: compile + validate every cell, fanned across the pool
+    let specs: Vec<(String, Arch)> = kernels
+        .iter()
+        .flat_map(|k| archs.iter().map(move |&a| (k.clone(), a)))
+        .collect();
+    let jobs = args.get_jobs();
+    let results = parallel_map(&specs, jobs, |_, (kernel, arch)| -> Result<Prepared> {
         let w = super::build_workload(kernel, seed, None)
             .with_context(|| format!("bench: building workload {kernel}"))?;
-        for &arch in &archs {
-            let c = build(&w.module, 0, arch)
-                .with_context(|| format!("bench: compiling {kernel}/{}", arch.name()))?;
-            // one validated run up front: a cell that stalls or errors
-            // should fail the harness, not poison the timing loop
-            let first = crate::sim::simulate(&c, &w.args, w.memory.clone(), &cfg)
-                .with_context(|| format!("bench: {kernel}/{}", arch.name()))?;
-            let label = format!("{kernel}/{}", arch.name());
-            let stats = bench.run(&label, || {
-                crate::sim::simulate(&c, &w.args, w.memory.clone(), &cfg)
-                    .expect("validated cell failed during timing loop")
-            });
-            total_instrs += first.dyn_instrs as f64;
-            total_secs += stats.min_ns / 1e9;
-            cells.push(Cell {
-                kernel: kernel.clone(),
-                arch: arch.name(),
-                mean_ns: stats.mean_ns,
-                stddev_ns: stats.stddev_ns,
-                min_ns: stats.min_ns,
-                cycles: first.cycles,
-                dyn_instrs: first.dyn_instrs,
-            });
+        let c = build(&w.module, 0, *arch)
+            .with_context(|| format!("bench: compiling {kernel}/{}", arch.name()))?;
+        // one validated run up front: a cell that stalls or errors
+        // should fail the harness, not poison the timing loop
+        let first = crate::sim::simulate(&c, &w.args, w.memory.clone(), &cfg)
+            .with_context(|| format!("bench: {kernel}/{}", arch.name()))?;
+        Ok(Prepared {
+            kernel: kernel.clone(),
+            arch: arch.name(),
+            w,
+            c,
+            cycles: first.cycles,
+            dyn_instrs: first.dyn_instrs,
+        })
+    });
+    let mut prepared = Vec::with_capacity(specs.len());
+    for (r, (kernel, arch)) in results.into_iter().zip(&specs) {
+        match r {
+            Ok(Ok(p)) => prepared.push(p),
+            Ok(Err(e)) => return Err(e),
+            Err(panic) => bail!("bench: {kernel}/{} panicked: {panic}", arch.name()),
         }
+    }
+
+    // phase 2: timing. One session per cell, allocated before the timed
+    // region: the closure `Bench` times performs no heap allocation and
+    // no `w.memory.clone()` (the old harness cloned memory inside the
+    // timed closure, attributing a host alloc+memcpy to sim throughput —
+    // the session restores its retained buffer instead, pinned
+    // bit-identical to a fresh simulate by rust/tests/determinism.rs).
+    let time_one = |p: &Prepared| -> BenchStats {
+        let mut sess = SimSession::new(&p.c, &cfg, p.w.memory.clone())
+            .expect("session allocation for a validated cell");
+        let label = format!("{}/{}", p.kernel, p.arch);
+        bench.run(&label, || {
+            sess.run(&p.w.args).expect("validated cell failed during timing loop")
+        })
+    };
+    let time_jobs =
+        args.get("time-jobs").and_then(|s| s.parse::<usize>().ok()).unwrap_or(1).max(1);
+    let timed: Vec<BenchStats> = if time_jobs > 1 {
+        println!(
+            "note: --time-jobs {time_jobs} times cells concurrently; co-running cells \
+             contend for cores and inflate wall times — do not gate regressions on this run"
+        );
+        let rs = parallel_map(&prepared, time_jobs, |_, p| time_one(p));
+        let mut v = Vec::with_capacity(prepared.len());
+        for (r, p) in rs.into_iter().zip(&prepared) {
+            match r {
+                Ok(s) => v.push(s),
+                Err(panic) => bail!("bench: timing {}/{} panicked: {panic}", p.kernel, p.arch),
+            }
+        }
+        v
+    } else {
+        prepared.iter().map(time_one).collect()
+    };
+
+    let mut cells: Vec<Cell> = Vec::with_capacity(prepared.len());
+    let mut total_instrs = 0.0;
+    let mut total_secs = 0.0;
+    for (p, stats) in prepared.iter().zip(&timed) {
+        total_instrs += p.dyn_instrs as f64;
+        total_secs += stats.min_ns / 1e9;
+        cells.push(Cell {
+            kernel: p.kernel.clone(),
+            arch: p.arch,
+            mean_ns: stats.mean_ns,
+            stddev_ns: stats.stddev_ns,
+            min_ns: stats.min_ns,
+            median_ns: stats.median_ns,
+            cycles: p.cycles,
+            dyn_instrs: p.dyn_instrs,
+        });
     }
 
     println!();
@@ -93,9 +171,17 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
         .with_context(|| format!("bench: writing {out_path}"))?;
     println!("wrote {out_path}");
 
-    if let Some(baseline_path) = args.get("baseline") {
+    let baseline_path = args.get("baseline");
+    if args.has_flag("refresh-baseline") {
+        // overwrite the committed baseline with this run's measurements
+        // (the gate is skipped — this run *defines* the new baseline)
+        let path = baseline_path.unwrap_or("BENCH_baseline.json");
+        std::fs::write(path, doc.render())
+            .with_context(|| format!("bench: refreshing baseline {path}"))?;
+        println!("refreshed baseline {path}");
+    } else if let Some(path) = baseline_path {
         let pct = args.get_f64("max-regress", 10.0);
-        compare_baseline(baseline_path, pct, &cells)?;
+        compare_baseline(path, pct, &cells)?;
     }
     Ok(())
 }
@@ -111,6 +197,7 @@ fn render_json(seed: u64, warmup: usize, samples: usize, cells: &[Cell]) -> Json
                 ("mean_ns".into(), Json::Num(c.mean_ns)),
                 ("stddev_ns".into(), Json::Num(c.stddev_ns)),
                 ("min_ns".into(), Json::Num(c.min_ns)),
+                ("median_ns".into(), Json::Num(c.median_ns)),
                 ("cycles".into(), Json::Num(c.cycles as f64)),
                 ("dyn_instrs".into(), Json::Num(c.dyn_instrs as f64)),
                 ("sim_instrs_per_sec".into(), Json::Num(ips)),
@@ -118,7 +205,7 @@ fn render_json(seed: u64, warmup: usize, samples: usize, cells: &[Cell]) -> Json
         })
         .collect();
     Json::Obj(vec![
-        ("schema".into(), Json::Str("dae-spec-bench/v1".into())),
+        ("schema".into(), Json::Str("dae-spec-bench/v2".into())),
         ("seed".into(), Json::Num(seed as f64)),
         ("warmup".into(), Json::Num(warmup as f64)),
         ("samples".into(), Json::Num(samples as f64)),
@@ -126,16 +213,18 @@ fn render_json(seed: u64, warmup: usize, samples: usize, cells: &[Cell]) -> Json
     ])
 }
 
-/// Compare against a previously written `BENCH_sim.json`: a cell
-/// regresses when its best (min) time exceeds the baseline's by more
-/// than `pct` percent. Cells missing from the baseline are skipped, so
-/// growing the suite never breaks the gate.
+/// Compare against a previously written bench file: a cell regresses
+/// when its best (min) time exceeds the baseline's by more than `pct`
+/// percent. Accepts schema v2 and v1 (v1 predates `median_ns`; the
+/// gate only reads `min_ns`, present in both). Cells missing from the
+/// baseline are skipped, so growing the suite never breaks the gate.
 fn compare_baseline(path: &str, pct: f64, cells: &[Cell]) -> Result<()> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("bench: reading baseline {path}"))?;
     let doc = Json::parse(&text).with_context(|| format!("bench: parsing baseline {path}"))?;
-    if doc.get("schema").and_then(Json::as_str) != Some("dae-spec-bench/v1") {
-        bail!("bench: {path} is not a dae-spec-bench/v1 file");
+    let schema = doc.get("schema").and_then(Json::as_str);
+    if !matches!(schema, Some("dae-spec-bench/v1") | Some("dae-spec-bench/v2")) {
+        bail!("bench: {path} is not a dae-spec-bench/v1 or /v2 file");
     }
     let baseline = doc.get("results").and_then(Json::as_arr).unwrap_or(&[]);
     let mut regressions = Vec::new();

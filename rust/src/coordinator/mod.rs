@@ -17,19 +17,30 @@ USAGE:
   dae-spec run --kernel <name> [--arch sta|dae|spec|oracle] [--seed N]
                [--misspec R] [--trace] [--watchdog N] [--timeout-ms MS]
   dae-spec fuzz [--kernel hist|all] [--plans 25] [--seed N] [--arch sta,dae,spec]
-                [--watchdog N] [--timeout-ms MS] [--verbose]
+                [--jobs N] [--watchdog N] [--timeout-ms MS] [--verbose]
                 differential fault-injection fuzzing: each plan perturbs
                 timing only (SRAM latency spikes, channel push/pop jitter,
                 LSQ load/store-queue squeezes, mis-speculation storms), so
                 final memory must stay bit-identical to the reference
                 interpreter; failing plans are minimized and printed with
-                their replay seed
+                their replay seed. --jobs N fans the kernel x plan x arch
+                grid across a panic-safe worker pool (0 or absent = all
+                cores); results are identical for every job count
   dae-spec bench [--kernels hist,thr,...] [--arch sta,dae,spec] [--seed N]
                  [--samples 10] [--warmup 2] [--out BENCH_sim.json]
                  [--baseline BENCH_sim.json] [--max-regress 10]
-                 host-side simulator throughput per kernel x arch; writes
-                 BENCH_sim.json and (with --baseline) fails if any cell's
-                 best time regresses by more than --max-regress percent
+                 [--jobs N] [--time-jobs N] [--refresh-baseline]
+                 host-side simulator throughput per kernel x arch via a
+                 reused SimSession per cell (memory restore is outside the
+                 timed region); writes BENCH_sim.json (schema v2, adds
+                 median_ns; v1 baselines still read) and (with --baseline)
+                 fails if any cell's best time regresses by more than
+                 --max-regress percent. --jobs parallelizes the
+                 compile+validate phase only; --time-jobs N also times
+                 cells concurrently (opt-in: co-running cells contend for
+                 cores and inflate wall times — keep serial for gating).
+                 --refresh-baseline rewrites the baseline file from this
+                 run's measurements
   dae-spec lint [--kernel <name>|all] [--arch sta,dae,spec] [--seed N]
                 [--deny error|warn|info] [--verbose]
                 static semantic verification of compiled slices: decoupling
@@ -53,7 +64,7 @@ Kernels: bfs bc sssp hist thr mm fw sort spmv nested<1-8>
 
 /// CLI dispatcher (kept in the library so it is testable).
 pub fn cli_main(argv: Vec<String>) -> i32 {
-    let args = Args::parse(&argv, &["trace", "no-check", "verbose"]);
+    let args = Args::parse(&argv, &["trace", "no-check", "verbose", "refresh-baseline"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "repro" => cmd_repro(&args),
@@ -126,14 +137,21 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
             }
             uncaught += misses.len();
         }
-        let out = crate::fault::fuzz_kernel(
-            kernel,
-            seed,
-            plans,
-            &archs,
-            &cfg,
-            args.has_flag("verbose"),
-        )?;
+    }
+    // The kernel x plan x arch grid fans across the worker pool; the
+    // sweep is bit-identical for every --jobs value (pinned by
+    // rust/tests/fault_fuzz.rs).
+    let jobs = args.get_jobs();
+    let outcomes = crate::fault::fuzz_sweep(
+        &kernels,
+        seed,
+        plans,
+        &archs,
+        &cfg,
+        jobs,
+        args.has_flag("verbose"),
+    )?;
+    for out in &outcomes {
         let arch_names: Vec<&str> = out.archs.iter().map(|a| a.name()).collect();
         cells += out.plans as usize * out.archs.len();
         if out.ok() {

@@ -7,8 +7,8 @@
 //! (`run_suite` returns the completed rows plus per-kernel failures).
 
 use crate::area::{estimate, AreaEstimate};
-use crate::sim::machine::{simulate, SimResult};
-use crate::sim::{interpret, memory_diff, MachineConfig};
+use crate::sim::machine::SimResult;
+use crate::sim::{interpret, memory_diff, MachineConfig, SimSession};
 use crate::transform::{build, Arch, Compiled};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -107,8 +107,15 @@ pub fn run_kernel(
                     catch_unwind(AssertUnwindSafe(|| -> Result<(Compiled, SimResult)> {
                         let c = build(&w.module, 0, arch)
                             .with_context(|| format!("{kernel}/{}", arch.name()))?;
-                        let sim = simulate(&c, &w.args, w.memory.clone(), cfg)
-                            .with_context(|| format!("{kernel}/{}", arch.name()))?;
+                        // explicit session (what `simulate` wraps): the
+                        // borrow of `c` ends at into_result, so `c` can
+                        // move out alongside the result
+                        let sim = (|| -> Result<SimResult> {
+                            let mut s = SimSession::new(&c, cfg, w.memory.clone())?;
+                            s.run(&w.args)?;
+                            Ok(s.into_result())
+                        })()
+                        .with_context(|| format!("{kernel}/{}", arch.name()))?;
                         Ok((c, sim))
                     }))
                 })

@@ -12,9 +12,10 @@
 
 use super::{FaultInjector, FaultPlan};
 use crate::ir::Op;
-use crate::sim::{interpret, memory_diff, simulate, MachineConfig};
+use crate::sim::{interpret, memory_diff, simulate, MachineConfig, SimSession};
 use crate::transform::{build, Arch, Compiled, DaeProgram};
-use anyhow::{Context, Result};
+use crate::util::pool::parallel_map;
+use anyhow::{bail, Context, Result};
 use std::fmt;
 
 /// One confirmed divergence: a plan × arch cell whose final memory (or
@@ -108,6 +109,14 @@ pub fn check_plan(
 /// Greedily shrink a failing plan: drop events one at a time, then the
 /// mis-speculation override, keeping each removal only if the failure
 /// still reproduces on the same kernel × arch cell.
+///
+/// The event-drop phase re-runs one workload under many candidate
+/// plans: the workload depends only on `plan.seed` / `plan.misspec`,
+/// neither of which event removal touches, so the workload, reference
+/// run and compiled program are built once and every candidate goes
+/// through a single reused [`SimSession`] (zero-alloc steady state).
+/// Dropping the misspec override *does* change the workload, so that
+/// final probe goes through the full [`check_plan`] path.
 pub fn minimize_plan(
     kernel: &str,
     plan: &FaultPlan,
@@ -115,11 +124,29 @@ pub fn minimize_plan(
     cfg: &MachineConfig,
 ) -> Result<FaultPlan> {
     let mut cur = plan.clone();
+    let w = crate::coordinator::build_workload(kernel, cur.seed, cur.misspec)?;
+    let reference = interpret(
+        &w.module,
+        &w.module.funcs[0],
+        &w.args,
+        w.memory.clone(),
+        cfg.max_dyn_instrs,
+    )
+    .with_context(|| format!("{kernel}: reference interpreter"))?;
+    let c = build(&w.module, 0, arch).with_context(|| format!("{kernel}/{}", arch.name()))?;
+    let mut sess = SimSession::new(&c, cfg, w.memory.clone())?;
     let mut i = 0;
     while i < cur.events.len() {
         let mut cand = cur.clone();
         cand.events.remove(i);
-        if check_plan(kernel, &cand, arch, cfg)?.is_some() {
+        sess.set_fault(Some(FaultInjector::new(cand.clone())));
+        // same reproduction criterion as check_plan: a stall/invariant
+        // trip under the plan counts, as does any memory divergence
+        let reproduced = match sess.run(&w.args) {
+            Err(_) => true,
+            Ok(_) => memory_diff(sess.memory(), &reference.memory).is_some(),
+        };
+        if reproduced {
             cur = cand;
         } else {
             i += 1;
@@ -136,7 +163,8 @@ pub fn minimize_plan(
 }
 
 /// Run `plans` generated fault plans for `kernel` across `archs`,
-/// collecting (and minimizing) every divergence.
+/// collecting (and minimizing) every divergence. Serial convenience
+/// wrapper over [`fuzz_sweep`].
 pub fn fuzz_kernel(
     kernel: &str,
     base_seed: u64,
@@ -145,28 +173,104 @@ pub fn fuzz_kernel(
     cfg: &MachineConfig,
     verbose: bool,
 ) -> Result<FuzzOutcome> {
-    let mut failures = Vec::new();
-    for index in 0..plans {
-        let plan = FaultPlan::generate(base_seed, index);
-        if verbose {
-            println!("plan {:>3}/{plans}: {plan}", index + 1);
+    let mut v =
+        fuzz_sweep(&[kernel.to_string()], base_seed, plans, archs, cfg, 1, verbose)?;
+    Ok(v.pop().expect("one kernel in, one outcome out"))
+}
+
+/// One (kernel, plan, arch) unit of fuzz work.
+struct FuzzCell<'a> {
+    kernel: &'a str,
+    plan_index: u64,
+    plan: &'a FaultPlan,
+    arch: Arch,
+}
+
+/// Fan the full (kernel × plan × arch) grid across a bounded panic-safe
+/// worker pool ([`parallel_map`]); `jobs == 1` is the serial sweep.
+///
+/// Results are **deterministic and job-count independent**: plan `i` is
+/// always `FaultPlan::generate(base_seed, i)` (shared across kernels,
+/// exactly as the serial per-kernel loop generated it), cells are
+/// enumerated kernel-major then plan then arch — the old serial visit
+/// order — and the pool merges results back by cell index, so the
+/// returned outcomes and their failure order never depend on `jobs`.
+/// A worker panic or infrastructure error fails the sweep, naming the
+/// cell.
+pub fn fuzz_sweep(
+    kernels: &[String],
+    base_seed: u64,
+    plans: u64,
+    archs: &[Arch],
+    cfg: &MachineConfig,
+    jobs: usize,
+    verbose: bool,
+) -> Result<Vec<FuzzOutcome>> {
+    let plan_list: Vec<FaultPlan> =
+        (0..plans).map(|i| FaultPlan::generate(base_seed, i)).collect();
+    if verbose {
+        for (i, plan) in plan_list.iter().enumerate() {
+            println!("plan {:>3}/{plans}: {plan}", i + 1);
         }
-        for &arch in archs {
-            if let Some(desc) = check_plan(kernel, &plan, arch, cfg)? {
-                let minimized = minimize_plan(kernel, &plan, arch, cfg)?;
-                failures.push(FuzzFailure {
-                    kernel: kernel.to_string(),
-                    plan_index: index,
-                    plan_seed: plan.seed,
-                    base_seed,
-                    arch,
-                    desc,
-                    minimized,
-                });
+    }
+    let mut cells: Vec<FuzzCell> = Vec::with_capacity(kernels.len() * plan_list.len() * archs.len());
+    for kernel in kernels {
+        for (pi, plan) in plan_list.iter().enumerate() {
+            for &arch in archs {
+                cells.push(FuzzCell { kernel, plan_index: pi as u64, plan, arch });
             }
         }
     }
-    Ok(FuzzOutcome { kernel: kernel.to_string(), plans, archs: archs.to_vec(), failures })
+    let results = parallel_map(&cells, jobs, |_, cell| -> Result<Option<FuzzFailure>> {
+        let Some(desc) = check_plan(cell.kernel, cell.plan, cell.arch, cfg)? else {
+            return Ok(None);
+        };
+        let minimized = minimize_plan(cell.kernel, cell.plan, cell.arch, cfg)?;
+        Ok(Some(FuzzFailure {
+            kernel: cell.kernel.to_string(),
+            plan_index: cell.plan_index,
+            plan_seed: cell.plan.seed,
+            base_seed,
+            arch: cell.arch,
+            desc,
+            minimized,
+        }))
+    });
+
+    let mut outcomes: Vec<FuzzOutcome> = kernels
+        .iter()
+        .map(|k| FuzzOutcome {
+            kernel: k.clone(),
+            plans,
+            archs: archs.to_vec(),
+            failures: Vec::new(),
+        })
+        .collect();
+    let per_kernel = plan_list.len() * archs.len();
+    for (i, r) in results.into_iter().enumerate() {
+        let cell = &cells[i];
+        match r {
+            Err(panic) => bail!(
+                "fuzz worker panicked on {}/{} plan #{}: {panic}",
+                cell.kernel,
+                cell.arch.name(),
+                cell.plan_index
+            ),
+            Ok(Err(e)) => {
+                return Err(e).with_context(|| {
+                    format!(
+                        "{}/{} plan #{}",
+                        cell.kernel,
+                        cell.arch.name(),
+                        cell.plan_index
+                    )
+                })
+            }
+            Ok(Ok(None)) => {}
+            Ok(Ok(Some(f))) => outcomes[i / per_kernel].failures.push(f),
+        }
+    }
+    Ok(outcomes)
 }
 
 /// IR-level semantic mutations — the static analogues of the protocol

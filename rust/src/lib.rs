@@ -74,12 +74,31 @@
 //!   polling disappears while cycles, memory and commit order stay
 //!   bit-identical (pinned by the `determinism` integration test and
 //!   the fault-fuzz differential harness).
+//! - **Reusable sessions** ([`sim::SimSession`]): repeated-run
+//!   consumers allocate the machine once per `(Compiled,
+//!   MachineConfig)` and re-run it with zero steady-state heap
+//!   allocation — every buffer (register files, channel FIFOs, LSQ
+//!   rings/ROBs, stats, commit log) is reset in place and memory is
+//!   restored from an immutable `MemorySnapshot` by memcpy.
+//!   [`sim::simulate`] is the one-shot wrapper. A session pins the
+//!   compiled program and machine shape; arguments and the fault plan
+//!   (`set_fault`) may vary per run, and a failed run never leaks
+//!   state into the next (reset happens on entry). Re-runs are
+//!   bit-identical to fresh calls — same determinism pins as above.
+//! - **Parallel harnesses** ([`util::pool`]): `dae-spec fuzz --jobs N`
+//!   fans the kernel × plan × arch grid over a bounded panic-safe
+//!   worker pool with deterministic, job-count-independent results;
+//!   `dae-spec bench` parallelizes compile+validate the same way while
+//!   keeping the timing loop serial by default (`--time-jobs` opts in,
+//!   with a documented contention caveat).
 //!
-//! Measure with `dae-spec bench` (writes `BENCH_sim.json`); compare
-//! against a saved run with
+//! Measure with `dae-spec bench` (writes `BENCH_sim.json`, schema
+//! `dae-spec-bench/v2` with mean/min/median per cell); compare against
+//! a saved run with
 //! `dae-spec bench --baseline BENCH_sim.json --max-regress 10`, which
 //! fails if any kernel × arch cell's best time regresses by more than
-//! the given percentage.
+//! the given percentage, or rewrite the committed baseline from fresh
+//! measurements with `--refresh-baseline`.
 
 pub mod analysis;
 pub mod area;

@@ -9,9 +9,17 @@
 //! waits on and is only re-stepped when that event fires, in a fixed
 //! deterministic order. Timing is unaffected: timestamps are computed
 //! from data dependencies, never from host scheduling order.
+//!
+//! All per-run machine state (register files, channel FIFOs, LSQ rings,
+//! stat vectors) lives in a reusable [`super::session::SimSession`];
+//! every stateful type here carries a `reset` that restores the
+//! freshly-constructed state without dropping buffer capacity, so a
+//! session re-run performs no steady-state heap allocation. [`simulate`]
+//! is a thin one-shot wrapper over the session.
 
 use super::decoded::{ChanTable, DBlock, DChanKind, DOp, DTerm, DecodedFn, NO_DEST};
 use super::interp::{clamp_idx, eval_fbin, eval_fcmp, eval_ibin, eval_icmp};
+use super::session::SimSession;
 use super::stall::{ChannelStat, LsqStat, StallDiagnostic, StallReason, UnitStat};
 use super::trace::Trace;
 use super::{MachineConfig, Memory};
@@ -59,7 +67,7 @@ struct Elem {
 
 /// What a blocked entity is waiting for on a channel.
 #[derive(Clone, Copy, Debug)]
-struct Wait {
+pub(super) struct Wait {
     chan: u32,
     /// `true`: producer blocked on a full FIFO, needs a pop to free
     /// space. `false`: consumer blocked on an empty FIFO, needs a push.
@@ -79,7 +87,7 @@ struct Chan {
 
 /// Dense channel state, indexed by [`ChanTable`] id. Accumulates a wake
 /// mask the scheduler drains after each entity step.
-struct Channels {
+pub(super) struct Channels {
     chans: Vec<Chan>,
     /// Functional FIFO capacity (0 = unbounded). Blocks producers only;
     /// timestamps are data-driven and unaffected.
@@ -88,8 +96,22 @@ struct Channels {
 }
 
 impl Channels {
-    fn new(n: usize, cap: usize) -> Self {
+    pub(super) fn new(n: usize, cap: usize) -> Self {
         Channels { chans: (0..n).map(|_| Chan::default()).collect(), cap, woken: 0 }
+    }
+
+    /// Restore the freshly-constructed state: every FIFO emptied, push/
+    /// pop rate chains and wake masks zeroed. Queue capacity is retained
+    /// so a session re-run pushes into already-allocated rings.
+    pub(super) fn reset(&mut self) {
+        for c in &mut self.chans {
+            c.q.clear();
+            c.last_push = 0;
+            c.last_pop = 0;
+            c.wake_on_push = 0;
+            c.wake_on_pop = 0;
+        }
+        self.woken = 0;
     }
 
     #[inline]
@@ -143,7 +165,7 @@ impl Channels {
         Some((e.val, e.poison, e.mem, t))
     }
 
-    fn all_empty(&self) -> bool {
+    pub(super) fn all_empty(&self) -> bool {
         self.chans.iter().all(|c| c.q.is_empty())
     }
 
@@ -155,7 +177,7 @@ impl Channels {
         self.chans[id as usize].wake_on_pop |= bit;
     }
 
-    fn register(&mut self, w: Wait, bit: u64) {
+    pub(super) fn register(&mut self, w: Wait, bit: u64) {
         if w.needs_pop {
             self.wait_for_pop(w.chan, bit);
         } else {
@@ -163,7 +185,7 @@ impl Channels {
         }
     }
 
-    fn take_woken(&mut self) -> u64 {
+    pub(super) fn take_woken(&mut self) -> u64 {
         std::mem::take(&mut self.woken)
     }
 }
@@ -173,7 +195,7 @@ impl Channels {
 // ---------------------------------------------------------------------------
 
 #[derive(Clone)]
-struct WinEntry {
+pub(super) struct WinEntry {
     req: Elem,
     t_enter: u64,
     /// Per-(array, mem) admission sequence — value delivery is reordered
@@ -215,7 +237,7 @@ impl Rob {
     }
 }
 
-struct Lsq {
+pub(super) struct Lsq {
     /// Index into `Module::arrays`.
     arr: u32,
     /// Scheduler entity bit of this LSQ.
@@ -225,7 +247,7 @@ struct Lsq {
     /// Dense id of this array's store-value stream.
     stval_ch: u32,
     /// LSQ window: admitted, unresolved requests in order.
-    window: VecDeque<WinEntry>,
+    pub(super) window: VecDeque<WinEntry>,
     /// Load-value reorder buffers, indexed by static-op id.
     robs: Vec<Rob>,
     /// Static ops with a ready ROB head whose delivery is blocked on a
@@ -245,7 +267,7 @@ struct Lsq {
 }
 
 impl Lsq {
-    fn new(arr: u32, bit: u64, tbl: &ChanTable, arr_len: usize) -> Self {
+    pub(super) fn new(arr: u32, bit: u64, tbl: &ChanTable, arr_len: usize) -> Self {
         Lsq {
             arr,
             bit,
@@ -262,6 +284,24 @@ impl Lsq {
             write_port: 0,
         }
     }
+
+    /// Restore the state of `Lsq::new` without dropping ring/window
+    /// capacity (zero-alloc session re-runs).
+    pub(super) fn reset(&mut self) {
+        self.window.clear();
+        for rob in &mut self.robs {
+            rob.next_admit = 0;
+            rob.next_release = 0;
+            rob.done.clear();
+        }
+        self.pending.clear();
+        self.t_enter_last = 0;
+        self.store_slots.clear();
+        self.load_slots.clear();
+        self.commit_at.fill(0);
+        self.read_port = 0;
+        self.write_port = 0;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -269,14 +309,14 @@ impl Lsq {
 // ---------------------------------------------------------------------------
 
 #[derive(Clone, Copy, PartialEq)]
-enum UnitKind {
+pub(super) enum UnitKind {
     /// Monolithic STA unit (direct memory access).
     Sta,
     Agu,
     Cu,
 }
 
-struct Unit<'a> {
+pub(super) struct Unit<'a> {
     kind: UnitKind,
     name: &'static str,
     f: &'a DecodedFn,
@@ -289,8 +329,8 @@ struct Unit<'a> {
     pc: usize,
     entered: bool,
     t_ctrl: u64,
-    done: bool,
-    dyn_instrs: u64,
+    pub(super) done: bool,
+    pub(super) dyn_instrs: u64,
     /// Scratch for atomic φ application on block entry.
     phi_buf: Vec<(u32, Val, u64)>,
     // STA-only memory timing state, dense per array
@@ -307,21 +347,25 @@ enum StepOut {
     Done,
 }
 
-struct SimCtx<'a> {
-    m: &'a Module,
-    tbl: &'a ChanTable,
-    cfg: &'a MachineConfig,
-    chans: Channels,
-    memory: Memory,
-    max_t: u64,
-    trace: Option<Trace>,
-    stores_committed: u64,
-    stores_poisoned: u64,
+/// Per-run execution context: shared config plus *borrowed* mutable
+/// state owned by the [`SimSession`] (so re-runs reuse every buffer).
+/// Scalar counters live here and are folded into the session's
+/// [`super::session::RunStats`] when the run finishes.
+pub(super) struct SimCtx<'a> {
+    pub(super) m: &'a Module,
+    pub(super) tbl: &'a ChanTable,
+    pub(super) cfg: &'a MachineConfig,
+    pub(super) chans: &'a mut Channels,
+    pub(super) memory: &'a mut Memory,
+    pub(super) max_t: u64,
+    pub(super) trace: &'a mut Option<Trace>,
+    pub(super) stores_committed: u64,
+    pub(super) stores_poisoned: u64,
     /// Per static op (dense by mem id): (requests, poisons).
-    per_mem: Vec<(u64, u64)>,
-    commit_log: Vec<(u32, i64, Val)>,
+    pub(super) per_mem: &'a mut [(u64, u64)],
+    pub(super) commit_log: &'a mut Vec<(u32, i64, Val)>,
     /// Cooperative wall-clock deadline (from `cfg.wall_timeout_ms`).
-    deadline: Option<Instant>,
+    pub(super) deadline: Option<Instant>,
 }
 
 impl SimCtx<'_> {
@@ -368,7 +412,7 @@ impl SimCtx<'_> {
         self.fault().map_or(self.cfg.st_q, |f| f.st_q(self.cfg.st_q, t))
     }
 
-    fn over_deadline(&self) -> bool {
+    pub(super) fn over_deadline(&self) -> bool {
         matches!(self.deadline, Some(d) if Instant::now() >= d)
     }
 
@@ -402,7 +446,7 @@ impl SimCtx<'_> {
         v
     }
 
-    fn stall_error(
+    pub(super) fn stall_error(
         &self,
         reason: StallReason,
         units: Vec<UnitStat>,
@@ -418,27 +462,24 @@ impl SimCtx<'_> {
     }
 }
 
-fn deadline_from(cfg: &MachineConfig) -> Option<Instant> {
+pub(super) fn deadline_from(cfg: &MachineConfig) -> Option<Instant> {
     (cfg.wall_timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(cfg.wall_timeout_ms))
 }
 
 impl<'a> Unit<'a> {
-    fn new(
+    /// Allocate a unit's state. The register file is unpopulated until
+    /// [`Unit::reset`] installs the run's arguments.
+    pub(super) fn new(
         kind: UnitKind,
         name: &'static str,
         f: &'a DecodedFn,
-        args: &[Val],
         n_arrays: usize,
     ) -> Self {
-        let mut env = vec![None; f.nvals];
-        for (i, &p) in f.params.iter().enumerate() {
-            env[p as usize] = Some(args[i]);
-        }
         Unit {
             kind,
             name,
             f,
-            env,
+            env: vec![None; f.nvals],
             tval: vec![0; f.nvals],
             cur: f.entry,
             prev: None,
@@ -454,7 +495,28 @@ impl<'a> Unit<'a> {
         }
     }
 
-    fn stat(&self) -> UnitStat {
+    /// Rewind to the entry block with a fresh register file seeded from
+    /// `args`. Buffer capacity is retained; no allocation.
+    pub(super) fn reset(&mut self, args: &[Val]) {
+        self.env.fill(None);
+        for (i, &p) in self.f.params.iter().enumerate() {
+            self.env[p as usize] = Some(args[i]);
+        }
+        self.tval.fill(0);
+        self.cur = self.f.entry;
+        self.prev = None;
+        self.pc = 0;
+        self.entered = false;
+        self.t_ctrl = 0;
+        self.done = false;
+        self.dyn_instrs = 0;
+        self.phi_buf.clear();
+        self.sta_store_commit.fill(0);
+        self.sta_read_port.fill(0);
+        self.sta_write_port.fill(0);
+    }
+
+    pub(super) fn stat(&self) -> UnitStat {
         UnitStat {
             unit: self.name.to_string(),
             t_ctrl: self.t_ctrl,
@@ -465,7 +527,7 @@ impl<'a> Unit<'a> {
 
     /// Execute until blocked on a channel event or done. Returns the wait
     /// condition when blocked.
-    fn run(&mut self, ctx: &mut SimCtx) -> Result<Option<Wait>> {
+    pub(super) fn run(&mut self, ctx: &mut SimCtx) -> Result<Option<Wait>> {
         loop {
             match self.step(ctx)? {
                 StepOut::Progress => {}
@@ -618,7 +680,7 @@ impl<'a> Unit<'a> {
                         t_issue + 1 + ctx.sta_rd_port_extra(t_issue);
                     let t_done = t_issue + ctx.read_lat(t_issue);
                     ctx.bump(t_done);
-                    if let Some(tr) = &mut ctx.trace {
+                    if let Some(tr) = ctx.trace.as_mut() {
                         tr.push("sta", "ld_issue", 0, t_issue);
                     }
                     (Some(v), t_done)
@@ -646,7 +708,7 @@ impl<'a> Unit<'a> {
                     *e = (*e).max(t_commit);
                     ctx.stores_committed += 1;
                     ctx.bump(t_commit);
-                    if let Some(tr) = &mut ctx.trace {
+                    if let Some(tr) = ctx.trace.as_mut() {
                         tr.push("sta", "st_commit", 0, t_w);
                     }
                     (None, t_commit)
@@ -660,7 +722,7 @@ impl<'a> Unit<'a> {
                         return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
                     }
                     ctx.bump(t);
-                    if let Some(tr) = &mut ctx.trace {
+                    if let Some(tr) = ctx.trace.as_mut() {
                         tr.push(self.name, if is_store { "send_st" } else { "send_ld" }, mem, t);
                     }
                     (None, t)
@@ -681,7 +743,7 @@ impl<'a> Unit<'a> {
                     };
                     let t = t + ctx.fault().map_or(0, |fi| fi.chan_pop_stall(t));
                     ctx.bump(t);
-                    if let Some(tr) = &mut ctx.trace {
+                    if let Some(tr) = ctx.trace.as_mut() {
                         tr.push(self.name, "consume", mem, t);
                     }
                     (Some(v), t)
@@ -694,7 +756,7 @@ impl<'a> Unit<'a> {
                         return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
                     }
                     ctx.bump(t);
-                    if let Some(tr) = &mut ctx.trace {
+                    if let Some(tr) = ctx.trace.as_mut() {
                         tr.push(self.name, "produce", mem, t);
                     }
                     (None, t)
@@ -711,7 +773,7 @@ impl<'a> Unit<'a> {
                         if !ctx.chans.try_push(chan, e, lat) {
                             return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
                         }
-                        if let Some(tr) = &mut ctx.trace {
+                        if let Some(tr) = ctx.trace.as_mut() {
                             tr.push(self.name, "poison", mem, t);
                         }
                     }
@@ -806,7 +868,7 @@ fn flush_rob(lsq: &mut Lsq, mem: u32, ctx: &mut SimCtx) {
 /// loads may bypass value-pending stores but stall on an earlier
 /// unresolved store to the same address (RAW). Poisoned stores release
 /// their slot without committing.
-fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
+pub(super) fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
     let arr = lsq.arr as usize;
 
     // retry value deliveries deferred by functional backpressure
@@ -880,7 +942,7 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
                     ctx.stores_poisoned += 1;
                     ctx.per_mem[e.req.mem as usize].1 += 1;
                     ctx.bump(t_resolve);
-                    if let Some(tr) = &mut ctx.trace {
+                    if let Some(tr) = ctx.trace.as_mut() {
                         tr.push("du", "st_poison", e.req.mem, t_resolve);
                     }
                 } else {
@@ -903,7 +965,7 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
                     lsq.store_slots.push_back(t_commit);
                     ctx.stores_committed += 1;
                     ctx.bump(t_commit);
-                    if let Some(tr) = &mut ctx.trace {
+                    if let Some(tr) = ctx.trace.as_mut() {
                         tr.push("du", "st_commit", e.req.mem, t_w);
                     }
                 }
@@ -936,7 +998,7 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
                 lsq.read_port = t_issue + 1;
                 let t_done = t_issue + ctx.read_lat(t_issue);
                 ctx.bump(t_done);
-                if let Some(tr) = &mut ctx.trace {
+                if let Some(tr) = ctx.trace.as_mut() {
                     tr.push("du", "ld_issue", e.req.mem, t_issue);
                 }
                 lsq.load_slots.push_back(t_done);
@@ -965,7 +1027,7 @@ fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
 }
 
 /// Snapshot of every non-empty per-array LSQ, for stall diagnostics.
-fn lsq_stats(lsqs: &[Lsq], m: &Module) -> Vec<LsqStat> {
+pub(super) fn lsq_stats(lsqs: &[Lsq], m: &Module) -> Vec<LsqStat> {
     lsqs.iter()
         .filter(|l| !l.window.is_empty() || !l.store_slots.is_empty() || !l.load_slots.is_empty())
         .map(|l| LsqStat {
@@ -982,18 +1044,18 @@ fn lsq_stats(lsqs: &[Lsq], m: &Module) -> Vec<LsqStat> {
 // ---------------------------------------------------------------------------
 
 /// Scheduler entity bits (wake-list): AGU, CU, then one per array LSQ.
-const AGU_BIT: u64 = 1 << 0;
-const CU_BIT: u64 = 1 << 1;
+pub(super) const AGU_BIT: u64 = 1 << 0;
+pub(super) const CU_BIT: u64 = 1 << 1;
 
 #[inline]
-fn lsq_bit(i: usize) -> u64 {
+pub(super) fn lsq_bit(i: usize) -> u64 {
     1 << (2 + i)
 }
 
 /// Convert the dense per-mem stats to the public sparse map. Entry
 /// creation in the old engine was admission-driven, so "requests > 0"
 /// reproduces the exact key set.
-fn per_mem_map(v: &[(u64, u64)]) -> FxHashMap<u32, (u64, u64)> {
+pub(super) fn per_mem_map(v: &[(u64, u64)]) -> FxHashMap<u32, (u64, u64)> {
     let mut out = FxHashMap::default();
     for (i, &(req, poi)) in v.iter().enumerate() {
         if req > 0 {
@@ -1005,201 +1067,20 @@ fn per_mem_map(v: &[(u64, u64)]) -> FxHashMap<u32, (u64, u64)> {
 
 /// Simulate a compiled architecture over `args` and an initial memory
 /// image.
+///
+/// One-shot convenience wrapper over [`SimSession`]: repeated-run
+/// consumers (bench timing loops, fuzz minimization) should hold a
+/// session instead, which reuses every per-run allocation and restores
+/// memory by memcpy. Results are identical either way.
 pub fn simulate(
     c: &Compiled,
     args: &[Val],
     memory: Memory,
     cfg: &MachineConfig,
 ) -> Result<SimResult> {
-    match c {
-        Compiled::Monolithic { module, decoded, .. } => {
-            let f = &decoded.fns[0];
-            let mut ctx = SimCtx {
-                m: module,
-                tbl: &decoded.chans,
-                cfg,
-                chans: Channels::new(decoded.chans.len(), cfg.chan_cap),
-                memory,
-                max_t: 0,
-                trace: if cfg.trace { Some(Trace::default()) } else { None },
-                stores_committed: 0,
-                stores_poisoned: 0,
-                per_mem: vec![(0, 0); decoded.chans.n_mems()],
-                commit_log: Vec::new(),
-                deadline: deadline_from(cfg),
-            };
-            let mut unit = Unit::new(UnitKind::Sta, "sta", f, args, module.arrays.len());
-            unit.run(&mut ctx)?;
-            if !unit.done {
-                return Err(ctx
-                    .stall_error(StallReason::Deadlock, vec![unit.stat()], vec![])
-                    .context("STA unit blocked (channel op in monolithic build?)"));
-            }
-            Ok(SimResult {
-                cycles: ctx.max_t,
-                memory: ctx.memory,
-                dyn_instrs: unit.dyn_instrs,
-                stores_committed: ctx.stores_committed,
-                stores_poisoned: 0,
-                spec_store_reqs: 0,
-                misspec_rate: 0.0,
-                per_mem: per_mem_map(&ctx.per_mem),
-                trace: ctx.trace,
-                commit_log: ctx.commit_log,
-            })
-        }
-        Compiled::Dae { program, decoded, .. } => {
-            let module = &program.module;
-            if module.arrays.len() > 62 {
-                bail!(
-                    "wake-list scheduler supports at most 62 memory arrays (got {})",
-                    module.arrays.len()
-                );
-            }
-            let mut ctx = SimCtx {
-                m: module,
-                tbl: &decoded.chans,
-                cfg,
-                chans: Channels::new(decoded.chans.len(), cfg.chan_cap),
-                memory,
-                max_t: 0,
-                trace: if cfg.trace { Some(Trace::default()) } else { None },
-                stores_committed: 0,
-                stores_poisoned: 0,
-                per_mem: vec![(0, 0); decoded.chans.n_mems()],
-                commit_log: Vec::new(),
-                deadline: deadline_from(cfg),
-            };
-            let spec_mems: Vec<u32> = c.speculated_mems();
-
-            let n_arrays = module.arrays.len();
-            let mut agu = Unit::new(UnitKind::Agu, "agu", &decoded.fns[0], args, n_arrays);
-            let mut cu = Unit::new(UnitKind::Cu, "cu", &decoded.fns[1], args, n_arrays);
-            let mut lsqs: Vec<Lsq> = (0..n_arrays)
-                .map(|i| {
-                    // commit_at is dense over the *actual* memory image
-                    Lsq::new(i as u32, lsq_bit(i), &decoded.chans, ctx.memory[i].len())
-                })
-                .collect();
-
-            let all_bits =
-                AGU_BIT | CU_BIT | lsqs.iter().enumerate().fold(0, |m, (i, _)| m | lsq_bit(i));
-            let mut runnable: u64 = all_bits;
-            let mut rounds: u64 = 0;
-            let mut stagnant: u64 = 0;
-            let mut fingerprint: (u64, u64) = (0, 0);
-            loop {
-                // One scheduler round, fixed order: AGU, CU, LSQ 0..n.
-                // Wakes raised for a not-yet-stepped entity run this
-                // round (matching the old poll-everything cadence);
-                // wakes for an already-stepped entity run next round.
-                let mut cur = runnable;
-                let mut next: u64 = 0;
-                let mut processed: u64 = 0;
-
-                processed |= AGU_BIT;
-                if cur & AGU_BIT != 0 && !agu.done {
-                    if let Some(w) = agu.run(&mut ctx)? {
-                        ctx.chans.register(w, AGU_BIT);
-                    }
-                    let woken = ctx.chans.take_woken();
-                    cur |= woken & !processed;
-                    next |= woken & processed;
-                }
-                processed |= CU_BIT;
-                if cur & CU_BIT != 0 && !cu.done {
-                    if let Some(w) = cu.run(&mut ctx)? {
-                        ctx.chans.register(w, CU_BIT);
-                    }
-                    let woken = ctx.chans.take_woken();
-                    cur |= woken & !processed;
-                    next |= woken & processed;
-                }
-                for (i, lsq) in lsqs.iter_mut().enumerate() {
-                    let bit = lsq_bit(i);
-                    processed |= bit;
-                    if cur & bit != 0 {
-                        du_step(lsq, &mut ctx)?;
-                        let woken = ctx.chans.take_woken();
-                        cur |= woken & !processed;
-                        next |= woken & processed;
-                    }
-                }
-
-                if agu.done
-                    && cu.done
-                    && ctx.chans.all_empty()
-                    && lsqs.iter().all(|l| l.window.is_empty())
-                {
-                    break;
-                }
-                if next == 0 {
-                    return Err(ctx
-                        .stall_error(
-                            StallReason::Deadlock,
-                            vec![agu.stat(), cu.stat()],
-                            lsq_stats(&lsqs, ctx.m),
-                        )
-                        .context(format!(
-                            "deadlock: agu_done={} cu_done={}",
-                            agu.done, cu.done
-                        )));
-                }
-                runnable = next;
-                // Progress watchdog: scheduler rounds can report wakes
-                // (queue shuffling) without any timestamp or instruction
-                // count advancing; bail with a diagnostic instead of
-                // spinning toward max_dyn_instrs.
-                rounds += 1;
-                let fp = (ctx.max_t, agu.dyn_instrs + cu.dyn_instrs);
-                if fp == fingerprint {
-                    stagnant += 1;
-                } else {
-                    fingerprint = fp;
-                    stagnant = 0;
-                }
-                if cfg.watchdog_rounds > 0 && stagnant >= cfg.watchdog_rounds {
-                    return Err(ctx.stall_error(
-                        StallReason::Watchdog { rounds: cfg.watchdog_rounds },
-                        vec![agu.stat(), cu.stat()],
-                        lsq_stats(&lsqs, ctx.m),
-                    ));
-                }
-                if rounds & 0x3FF == 0 && ctx.over_deadline() {
-                    return Err(ctx.stall_error(
-                        StallReason::WallClock { ms: cfg.wall_timeout_ms },
-                        vec![agu.stat(), cu.stat()],
-                        lsq_stats(&lsqs, ctx.m),
-                    ));
-                }
-            }
-
-            let spec_store_reqs: u64 = spec_mems
-                .iter()
-                .map(|&m| ctx.per_mem.get(m as usize).map(|x| x.0).unwrap_or(0))
-                .sum();
-            let spec_poisons: u64 = spec_mems
-                .iter()
-                .map(|&m| ctx.per_mem.get(m as usize).map(|x| x.1).unwrap_or(0))
-                .sum();
-            Ok(SimResult {
-                cycles: ctx.max_t,
-                memory: ctx.memory,
-                dyn_instrs: agu.dyn_instrs + cu.dyn_instrs,
-                stores_committed: ctx.stores_committed,
-                stores_poisoned: ctx.stores_poisoned,
-                spec_store_reqs,
-                misspec_rate: if spec_store_reqs > 0 {
-                    spec_poisons as f64 / spec_store_reqs as f64
-                } else {
-                    0.0
-                },
-                per_mem: per_mem_map(&ctx.per_mem),
-                trace: ctx.trace,
-                commit_log: ctx.commit_log,
-            })
-        }
-    }
+    let mut session = SimSession::new(c, cfg, memory)?;
+    session.run(args)?;
+    Ok(session.into_result())
 }
 
 /// Simulate and also return a functional cross-check against the

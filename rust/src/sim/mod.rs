@@ -25,16 +25,26 @@
 //! a load from an array may not issue before every earlier store to that
 //! array has committed ("loads that cannot be disambiguated at compile
 //! time execute in order", §8.1.1).
+//!
+//! Repeated-run consumers (bench timing loops, fuzz plan minimization)
+//! should hold a [`SimSession`] — a reusable context allocated once per
+//! `(Compiled, MachineConfig)` whose re-runs reset all machine state in
+//! place and restore memory from a [`MemorySnapshot`] by memcpy, so the
+//! steady state performs zero heap allocation. [`simulate`] is the
+//! one-shot wrapper; results are bit-identical either way (pinned by
+//! `rust/tests/determinism.rs`).
 
 pub mod decoded;
 pub mod interp;
 pub mod machine;
+pub mod session;
 pub mod stall;
 pub mod trace;
 
 pub use decoded::{decode_fns, DecodedSim};
 pub use interp::{interpret, InterpResult};
 pub use machine::{simulate, simulate_checked, SimResult};
+pub use session::{MemorySnapshot, RunStats, SimSession};
 pub use stall::{ChannelStat, LsqStat, StallDiagnostic, StallReason, UnitStat};
 pub use trace::{Trace, TraceEvent};
 

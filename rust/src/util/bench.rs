@@ -1,5 +1,6 @@
 //! Tiny bench harness (criterion is unavailable offline): warmup +
-//! timed samples with mean / stddev / min, criterion-like output.
+//! timed samples with mean / stddev / min / median, criterion-like
+//! output.
 
 use std::time::Instant;
 
@@ -19,6 +20,9 @@ pub struct BenchStats {
     pub mean_ns: f64,
     pub stddev_ns: f64,
     pub min_ns: f64,
+    /// Median sample: robust against one-sided scheduler noise, the
+    /// preferred regression-gate statistic (schema `dae-spec-bench/v2`).
+    pub median_ns: f64,
 }
 
 impl BenchStats {
@@ -55,16 +59,27 @@ impl Bench {
         let mean = times.iter().sum::<f64>() / times.len() as f64;
         let var =
             times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = if sorted.is_empty() {
+            0.0
+        } else if sorted.len() % 2 == 1 {
+            sorted[sorted.len() / 2]
+        } else {
+            (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2]) / 2.0
+        };
         let stats = BenchStats {
             mean_ns: mean,
             stddev_ns: var.sqrt(),
-            min_ns: times.iter().copied().fold(f64::INFINITY, f64::min),
+            min_ns: sorted.first().copied().unwrap_or(f64::INFINITY),
+            median_ns: median,
         };
         println!(
-            "{name:<44} time: [{} ± {}]  (min {})",
+            "{name:<44} time: [{} ± {}]  (min {}, median {})",
             BenchStats::fmt_time(stats.mean_ns),
             BenchStats::fmt_time(stats.stddev_ns),
             BenchStats::fmt_time(stats.min_ns),
+            BenchStats::fmt_time(stats.median_ns),
         );
         stats
     }

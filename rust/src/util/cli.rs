@@ -52,6 +52,15 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Worker count for `--jobs N`: absent or `0` means "use every
+    /// available core" (see [`crate::util::pool::default_jobs`]).
+    pub fn get_jobs(&self) -> usize {
+        match self.get("jobs").and_then(|s| s.parse::<usize>().ok()) {
+            Some(0) | None => crate::util::pool::default_jobs(),
+            Some(n) => n,
+        }
+    }
 }
 
 #[cfg(test)]

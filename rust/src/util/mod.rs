@@ -6,10 +6,12 @@ pub mod bench;
 pub mod fxhash;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prng;
 
 pub use bench::Bench;
 pub use fxhash::FxHashMap;
 pub use cli::Args;
 pub use json::Json;
+pub use pool::{default_jobs, parallel_map};
 pub use prng::Rng;

@@ -1,0 +1,141 @@
+//! Bounded panic-safe worker pool over scoped threads (rayon is
+//! unavailable offline). One entry point: [`parallel_map`], a
+//! deterministic work-stealing map — results come back in item order
+//! regardless of which worker ran what, and a panicking item becomes an
+//! `Err` slot instead of taking the process (or its worker) down.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default worker count: the machine's available parallelism (1 if
+/// unknown).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Render a payload from `catch_unwind` as a human-readable message.
+pub fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Apply `f` to every item on up to `jobs` scoped worker threads.
+///
+/// - **Deterministic ordering:** the output slot `i` always holds the
+///   result for `items[i]`; workers pull items off a shared atomic
+///   counter but results are merged back by index.
+/// - **Panic safety:** each call runs under `catch_unwind`, so one
+///   panicking item yields `Err(message)` in its slot and the worker
+///   moves on to the next item. If a worker thread dies anyway (panic
+///   in the unwind path), its claimed-but-unfinished items surface as
+///   `Err` rather than being silently dropped.
+/// - `jobs == 1` (or a single item) degenerates to a serial in-place
+///   loop on the calling thread — same code path, no thread spawn.
+///
+/// `f` receives `(index, &item)`. Use the index for deterministic
+/// per-item seeds or labels.
+pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<Result<R, String>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs <= 1 {
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, it)| catch_unwind(AssertUnwindSafe(|| f(i, it))).map_err(panic_msg))
+            .collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut done: Vec<Vec<(usize, Result<R, String>)>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            let next = &next;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                let mut local: Vec<(usize, Result<R, String>)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))).map_err(panic_msg);
+                    local.push((i, r));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            // A worker that dies outright loses only its local results;
+            // the missing slots are filled below.
+            if let Ok(local) = h.join() {
+                done.push(local);
+            }
+        }
+    });
+
+    let mut out: Vec<Option<Result<R, String>>> = (0..items.len()).map(|_| None).collect();
+    for (i, r) in done.into_iter().flatten() {
+        out[i] = Some(r);
+    }
+    out.into_iter()
+        .map(|slot| slot.unwrap_or_else(|| Err("worker thread died mid-item".to_string())))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_results_any_job_count() {
+        let items: Vec<u64> = (0..100).collect();
+        for jobs in [1, 2, 4, 16] {
+            let out = parallel_map(&items, jobs, |i, &x| {
+                assert_eq!(i as u64, x);
+                x * x
+            });
+            assert_eq!(out.len(), 100);
+            for (i, r) in out.iter().enumerate() {
+                assert_eq!(*r.as_ref().unwrap(), (i * i) as u64, "jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn panics_become_err_slots() {
+        let items: Vec<u64> = (0..20).collect();
+        let out = parallel_map(&items, 4, |_, &x| {
+            if x % 7 == 3 {
+                panic!("boom on {x}");
+            }
+            x + 1
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i % 7 == 3 {
+                let e = r.as_ref().unwrap_err();
+                assert!(e.contains("boom"), "slot {i}: {e}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as u64 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_oversubscribed() {
+        let out: Vec<Result<u64, String>> = parallel_map(&[], 8, |_, &x: &u64| x);
+        assert!(out.is_empty());
+        let out = parallel_map(&[1u64, 2], 64, |_, &x| x * 10);
+        assert_eq!(out[0].as_ref().unwrap(), &10);
+        assert_eq!(out[1].as_ref().unwrap(), &20);
+    }
+}

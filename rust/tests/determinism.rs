@@ -7,7 +7,7 @@
 //! reference check cannot see.
 
 use dae_spec::coordinator::build_workload;
-use dae_spec::sim::{memory_diff, simulate, MachineConfig, SimResult};
+use dae_spec::sim::{memory_diff, simulate, MachineConfig, SimResult, SimSession};
 use dae_spec::transform::{build, Arch};
 use dae_spec::workloads::PAPER_KERNELS;
 
@@ -26,6 +26,10 @@ fn assert_same(kernel: &str, arch: Arch, what: &str, a: &SimResult, b: &SimResul
         memory_diff(&a.memory, &b.memory),
         None,
         "{kernel}/{arch:?}: memory differs ({what})"
+    );
+    assert_eq!(
+        a.commit_log, b.commit_log,
+        "{kernel}/{arch:?}: commit log differs ({what})"
     );
 }
 
@@ -49,6 +53,58 @@ fn repeated_runs_are_cycle_identical() {
             assert_same(kernel, arch, "run 1 vs run 2", &a, &b);
             assert_same(kernel, arch, "untraced vs traced", &a, &t);
             assert!(t.trace.is_some(), "{kernel}/{arch:?}: trace requested but missing");
+        }
+    }
+}
+
+#[test]
+fn session_reuse_matches_fresh_simulate_everywhere() {
+    // The zero-alloc re-run path: every kernel × arch goes twice through
+    // one reused SimSession (in-place reset + memcpy memory restore) and
+    // must be bit-identical — cycles, memory, commit log — to a fresh
+    // `simulate` call. This is the pin that makes moving the memory
+    // clone out of the bench timing loop a measurement fix, not a
+    // behaviour change.
+    let cfg = MachineConfig::default();
+    let mut kernels: Vec<&str> = PAPER_KERNELS.to_vec();
+    kernels.push("nested2");
+    for kernel in kernels {
+        let w = build_workload(kernel, 2026, None).unwrap();
+        for arch in [Arch::Sta, Arch::Dae, Arch::Spec] {
+            let c = build(&w.module, 0, arch).unwrap();
+            let fresh = simulate(&c, &w.args, w.memory.clone(), &cfg)
+                .unwrap_or_else(|e| panic!("{kernel}/{arch:?}: fresh simulate: {e:#}"));
+            let mut sess = SimSession::new(&c, &cfg, w.memory.clone())
+                .unwrap_or_else(|e| panic!("{kernel}/{arch:?}: session alloc: {e:#}"));
+            for rerun in 0..2 {
+                let stats = sess
+                    .run(&w.args)
+                    .unwrap_or_else(|e| panic!("{kernel}/{arch:?} run {rerun}: {e:#}"));
+                assert_eq!(
+                    stats.cycles, fresh.cycles,
+                    "{kernel}/{arch:?} run {rerun}: cycles differ from fresh simulate"
+                );
+                assert_eq!(
+                    stats.dyn_instrs, fresh.dyn_instrs,
+                    "{kernel}/{arch:?} run {rerun}: dyn_instrs differ"
+                );
+                assert_eq!(
+                    memory_diff(sess.memory(), &fresh.memory),
+                    None,
+                    "{kernel}/{arch:?} run {rerun}: memory differs"
+                );
+                assert_eq!(
+                    sess.commit_log(),
+                    &fresh.commit_log[..],
+                    "{kernel}/{arch:?} run {rerun}: commit log differs"
+                );
+            }
+            let result = sess.into_result();
+            assert_same(kernel, arch, "reused session vs fresh", &result, &fresh);
+            assert_eq!(
+                result.per_mem, fresh.per_mem,
+                "{kernel}/{arch:?}: per-mem stats differ"
+            );
         }
     }
 }

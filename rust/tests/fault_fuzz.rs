@@ -8,7 +8,7 @@
 //!    divergence, and minimization shrinks the plan to that one fault.
 
 use dae_spec::fault::{
-    check_plan, fuzz_kernel, minimize_plan, FaultEvent, FaultPlan, FaultSite,
+    check_plan, fuzz_kernel, fuzz_sweep, minimize_plan, FaultEvent, FaultPlan, FaultSite,
 };
 use dae_spec::sim::MachineConfig;
 use dae_spec::transform::Arch;
@@ -52,6 +52,43 @@ fn fuzz_is_deterministic_across_runs() {
     let p1: Vec<FaultPlan> = (0..4).map(|i| FaultPlan::generate(99, i)).collect();
     let p2: Vec<FaultPlan> = (0..4).map(|i| FaultPlan::generate(99, i)).collect();
     assert_eq!(p1, p2);
+}
+
+#[test]
+fn parallel_fuzz_sweep_matches_serial() {
+    // `dae-spec fuzz --jobs N` fans the kernel × plan × arch grid over
+    // the worker pool; the outcomes must be identical to the serial
+    // sweep (jobs=1) in content AND order — plan generation, cell
+    // enumeration and result merging are all job-count independent.
+    let cfg = MachineConfig::default();
+    let kernels = vec!["hist".to_string(), "thr".to_string()];
+    let serial = fuzz_sweep(&kernels, 2026, 3, &FUZZ_ARCHS, &cfg, 1, false).unwrap();
+    let parallel = fuzz_sweep(&kernels, 2026, 3, &FUZZ_ARCHS, &cfg, 4, false).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.kernel, p.kernel, "outcome order must match the kernel list");
+        assert_eq!(s.plans, p.plans);
+        assert_eq!(s.archs, p.archs);
+        assert_eq!(
+            s.failures.len(),
+            p.failures.len(),
+            "{}: serial and parallel sweeps disagree",
+            s.kernel
+        );
+        for (sf, pf) in s.failures.iter().zip(&p.failures) {
+            assert_eq!(sf.plan_index, pf.plan_index);
+            assert_eq!(sf.arch, pf.arch);
+            assert_eq!(sf.desc, pf.desc);
+        }
+        // timing-only generated plans: both paths must also be clean
+        assert!(s.ok(), "{}: timing-only plan diverged (serial)", s.kernel);
+        assert!(p.ok(), "{}: timing-only plan diverged (parallel)", p.kernel);
+    }
+
+    // and the per-kernel wrapper is the jobs=1 sweep
+    let single = fuzz_kernel("hist", 2026, 3, &FUZZ_ARCHS, &cfg, false).unwrap();
+    assert_eq!(single.kernel, serial[0].kernel);
+    assert_eq!(single.failures.len(), serial[0].failures.len());
 }
 
 fn poison_drop_plan() -> FaultPlan {
