@@ -12,12 +12,15 @@
 //!    cells concurrently; co-running cells contend for cores and
 //!    inflate wall times, so never gate regressions on those numbers.
 //!
-//! Results go to `BENCH_sim.json` (schema `dae-spec-bench/v2`, which
-//! adds `median_ns`; the baseline reader still accepts v1). Pass
+//! Results go to `BENCH_sim.json` (schema `dae-spec-bench/v3`, which
+//! adds a per-cell [`MetricsSummary`] collected during the phase-1
+//! validation run — metrics stay *off* in the timed region; v2 added
+//! `median_ns`; the baseline reader accepts v1–v3). Pass
 //! `--baseline BENCH_sim.json --max-regress 10` to fail when a cell's
 //! best time regresses by more than the given percentage, or
 //! `--refresh-baseline` to rewrite the baseline from this run.
 
+use crate::metrics::MetricsSummary;
 use crate::sim::{MachineConfig, SimSession};
 use crate::transform::{build, Arch, Compiled};
 use crate::util::bench::BenchStats;
@@ -35,6 +38,7 @@ struct Cell {
     median_ns: f64,
     cycles: u64,
     dyn_instrs: u64,
+    metrics: Option<MetricsSummary>,
 }
 
 /// A compiled + validated cell, ready for the timing phase.
@@ -45,6 +49,9 @@ struct Prepared {
     c: Compiled,
     cycles: u64,
     dyn_instrs: u64,
+    /// Telemetry from the validation run (the timing loop runs with
+    /// metrics off).
+    metrics: Option<MetricsSummary>,
 }
 
 pub fn cmd_bench(args: &Args) -> Result<()> {
@@ -73,16 +80,27 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
         let c = build(&w.module, 0, *arch)
             .with_context(|| format!("bench: compiling {kernel}/{}", arch.name()))?;
         // one validated run up front: a cell that stalls or errors
-        // should fail the harness, not poison the timing loop
-        let first = crate::sim::simulate(&c, &w.args, w.memory.clone(), &cfg)
-            .with_context(|| format!("bench: {kernel}/{}", arch.name()))?;
+        // should fail the harness, not poison the timing loop. Metrics
+        // are collected here (and only here — the timed sessions below
+        // run with them off) so BENCH_sim.json carries a per-cell
+        // MetricsSummary at zero cost to the measured numbers.
+        let (cycles, dyn_instrs, metrics) = {
+            let mut mcfg = cfg.clone();
+            mcfg.metrics = true;
+            let mut sess = SimSession::new(&c, &mcfg, w.memory.clone())?;
+            let first = sess
+                .run(&w.args)
+                .with_context(|| format!("bench: {kernel}/{}", arch.name()))?;
+            (first.cycles, first.dyn_instrs, sess.metrics_summary().cloned())
+        };
         Ok(Prepared {
             kernel: kernel.clone(),
             arch: arch.name(),
             w,
             c,
-            cycles: first.cycles,
-            dyn_instrs: first.dyn_instrs,
+            cycles,
+            dyn_instrs,
+            metrics,
         })
     });
     let mut prepared = Vec::with_capacity(specs.len());
@@ -143,6 +161,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             median_ns: stats.median_ns,
             cycles: p.cycles,
             dyn_instrs: p.dyn_instrs,
+            metrics: p.metrics.clone(),
         });
     }
 
@@ -191,7 +210,7 @@ fn render_json(seed: u64, warmup: usize, samples: usize, cells: &[Cell]) -> Json
         .iter()
         .map(|c| {
             let ips = c.dyn_instrs as f64 / (c.min_ns / 1e9);
-            Json::Obj(vec![
+            let mut fields = vec![
                 ("kernel".into(), Json::Str(c.kernel.clone())),
                 ("arch".into(), Json::Str(c.arch.into())),
                 ("mean_ns".into(), Json::Num(c.mean_ns)),
@@ -201,11 +220,15 @@ fn render_json(seed: u64, warmup: usize, samples: usize, cells: &[Cell]) -> Json
                 ("cycles".into(), Json::Num(c.cycles as f64)),
                 ("dyn_instrs".into(), Json::Num(c.dyn_instrs as f64)),
                 ("sim_instrs_per_sec".into(), Json::Num(ips)),
-            ])
+            ];
+            if let Some(m) = &c.metrics {
+                fields.push(("metrics".into(), m.to_json()));
+            }
+            Json::Obj(fields)
         })
         .collect();
     Json::Obj(vec![
-        ("schema".into(), Json::Str("dae-spec-bench/v2".into())),
+        ("schema".into(), Json::Str("dae-spec-bench/v3".into())),
         ("seed".into(), Json::Num(seed as f64)),
         ("warmup".into(), Json::Num(warmup as f64)),
         ("samples".into(), Json::Num(samples as f64)),
@@ -215,16 +238,20 @@ fn render_json(seed: u64, warmup: usize, samples: usize, cells: &[Cell]) -> Json
 
 /// Compare against a previously written bench file: a cell regresses
 /// when its best (min) time exceeds the baseline's by more than `pct`
-/// percent. Accepts schema v2 and v1 (v1 predates `median_ns`; the
-/// gate only reads `min_ns`, present in both). Cells missing from the
-/// baseline are skipped, so growing the suite never breaks the gate.
+/// percent. Accepts schemas v1–v3 (v1 predates `median_ns`, v3 adds
+/// per-cell `metrics`; the gate only reads `min_ns`, present in all).
+/// Cells missing from the baseline are skipped, so growing the suite
+/// never breaks the gate.
 fn compare_baseline(path: &str, pct: f64, cells: &[Cell]) -> Result<()> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("bench: reading baseline {path}"))?;
     let doc = Json::parse(&text).with_context(|| format!("bench: parsing baseline {path}"))?;
     let schema = doc.get("schema").and_then(Json::as_str);
-    if !matches!(schema, Some("dae-spec-bench/v1") | Some("dae-spec-bench/v2")) {
-        bail!("bench: {path} is not a dae-spec-bench/v1 or /v2 file");
+    if !matches!(
+        schema,
+        Some("dae-spec-bench/v1") | Some("dae-spec-bench/v2") | Some("dae-spec-bench/v3")
+    ) {
+        bail!("bench: {path} is not a dae-spec-bench/v1, /v2 or /v3 file");
     }
     let baseline = doc.get("results").and_then(Json::as_arr).unwrap_or(&[]);
     let mut regressions = Vec::new();

@@ -2,6 +2,7 @@
 //! architectures, paper-format reports, and the CLI entrypoint.
 
 pub mod bench;
+pub mod profile;
 pub mod report;
 pub mod runner;
 
@@ -32,8 +33,9 @@ USAGE:
                  [--jobs N] [--time-jobs N] [--refresh-baseline]
                  host-side simulator throughput per kernel x arch via a
                  reused SimSession per cell (memory restore is outside the
-                 timed region); writes BENCH_sim.json (schema v2, adds
-                 median_ns; v1 baselines still read) and (with --baseline)
+                 timed region); writes BENCH_sim.json (schema v3, adds a
+                 per-cell metrics summary from the validation run;
+                 v1/v2 baselines still read) and (with --baseline)
                  fails if any cell's best time regresses by more than
                  --max-regress percent. --jobs parallelizes the
                  compile+validate phase only; --time-jobs N also times
@@ -41,6 +43,17 @@ USAGE:
                  cores and inflate wall times — keep serial for gating).
                  --refresh-baseline rewrites the baseline file from this
                  run's measurements
+  dae-spec profile [--kernel hist] [--arch sta,dae,spec] [--seed N]
+                   [--misspec R] [--json] [--out PROFILE.json]
+                   [--perfetto BASE.json] [--watchdog N] [--timeout-ms MS]
+                   run one kernel with the metrics layer on and report
+                   per-unit busy/blocked cycles, channel occupancy, LSQ
+                   residency, decoupling slack (AGU lead over the CU),
+                   MLP and speculation/poison counters. --json prints the
+                   dae-spec-profile/v1 document (--out writes it);
+                   --perfetto BASE.json writes one Chrome/Perfetto
+                   trace-event file per arch (BASE.<arch>.json) — open at
+                   https://ui.perfetto.dev
   dae-spec lint [--kernel <name>|all] [--arch sta,dae,spec] [--seed N]
                 [--deny error|warn|info] [--verbose]
                 static semantic verification of compiled slices: decoupling
@@ -64,7 +77,7 @@ Kernels: bfs bc sssp hist thr mm fw sort spmv nested<1-8>
 
 /// CLI dispatcher (kept in the library so it is testable).
 pub fn cli_main(argv: Vec<String>) -> i32 {
-    let args = Args::parse(&argv, &["trace", "no-check", "verbose", "refresh-baseline"]);
+    let args = Args::parse(&argv, &["trace", "no-check", "verbose", "refresh-baseline", "json"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "repro" => cmd_repro(&args),
@@ -72,6 +85,7 @@ pub fn cli_main(argv: Vec<String>) -> i32 {
         "fuzz" => cmd_fuzz(&args),
         "lint" => cmd_lint(&args),
         "bench" => bench::cmd_bench(&args),
+        "profile" => profile::cmd_profile(&args),
         "compile" => cmd_compile(&args),
         "lsq-sweep" => cmd_lsq_sweep(&args),
         "list" => {
@@ -164,6 +178,24 @@ fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
         } else {
             for f in &out.failures {
                 eprintln!("{f}");
+                // dump a Perfetto trace of the minimized plan next to
+                // the replay seed; best-effort — a trace export failure
+                // must not mask the divergence report
+                let path = format!(
+                    "fuzz_fail_{}_{}_plan{}.perfetto.json",
+                    f.kernel,
+                    f.arch.name().to_lowercase(),
+                    f.plan_index
+                );
+                match crate::fault::failure_perfetto(f, &cfg) {
+                    Ok(doc) => match std::fs::write(&path, doc.render()) {
+                        Ok(()) => {
+                            eprintln!("  trace: {path} — open at https://ui.perfetto.dev")
+                        }
+                        Err(e) => eprintln!("  trace: could not write {path}: {e}"),
+                    },
+                    Err(e) => eprintln!("  trace: export failed: {e:#}"),
+                }
             }
             eprintln!(
                 "fuzz: {}/{} plan x arch cell(s) diverged on {}",

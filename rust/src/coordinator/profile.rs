@@ -1,0 +1,158 @@
+//! `dae-spec profile` — run one kernel across architectures with the
+//! metrics layer and pipeline tracing enabled, then report the
+//! telemetry ([`crate::metrics`]): per-unit cycle accounting, channel
+//! occupancy, LSQ residency, decoupling slack, MLP and speculation
+//! counters.
+//!
+//! Three output forms:
+//!
+//! - default: the human-readable [`MetricsSummary::render`] report per
+//!   architecture;
+//! - `--json` (and/or `--out FILE`): the machine-readable schema
+//!   `dae-spec-profile/v1` — deterministic, same seed → byte-identical
+//!   document (pinned by `rust/tests/metrics.rs`);
+//! - `--perfetto BASE.json`: one Chrome/Perfetto `trace_event`
+//!   document per architecture, written to `BASE.<arch>.json` — open
+//!   at <https://ui.perfetto.dev>.
+
+use crate::metrics::MetricsSummary;
+use crate::sim::{MachineConfig, SimSession};
+use crate::transform::{build, Arch};
+use crate::util::{Args, Json};
+use anyhow::{Context, Result};
+
+/// One profiled kernel × arch cell.
+pub struct ProfileRun {
+    pub arch: Arch,
+    pub cycles: u64,
+    pub summary: MetricsSummary,
+    /// Chrome/Perfetto `trace_event` document of the run.
+    pub perfetto: Json,
+}
+
+/// Profile one cell: compile, run once with metrics + trace forced on
+/// (profiling observes the machine; it never changes its timing — the
+/// run's cycles equal a metrics-off run's, pinned by
+/// `rust/tests/metrics.rs`).
+pub fn profile_kernel(
+    kernel: &str,
+    seed: u64,
+    misspec: Option<f64>,
+    arch: Arch,
+    cfg: &MachineConfig,
+) -> Result<ProfileRun> {
+    let mut pcfg = cfg.clone();
+    pcfg.metrics = true;
+    pcfg.trace = true;
+    let w = super::build_workload(kernel, seed, misspec)
+        .with_context(|| format!("profile: building workload {kernel}"))?;
+    let c = build(&w.module, 0, arch)
+        .with_context(|| format!("profile: compiling {kernel}/{}", arch.name()))?;
+    let mut sess = SimSession::new(&c, &pcfg, w.memory.clone())?;
+    let stats = sess
+        .run(&w.args)
+        .with_context(|| format!("profile: {kernel}/{}", arch.name()))?;
+    let summary = sess
+        .metrics_summary()
+        .cloned()
+        .expect("metrics are forced on for profiling runs");
+    let label = format!("{kernel}/{} seed={seed}", arch.name());
+    let perfetto = sess.perfetto(&label).expect("trace is forced on for profiling runs");
+    Ok(ProfileRun { arch, cycles: stats.cycles, summary, perfetto })
+}
+
+/// The `dae-spec-profile/v1` document for a set of profiled cells.
+pub fn profile_doc(kernel: &str, seed: u64, runs: &[ProfileRun]) -> Json {
+    let results = runs
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("arch".into(), Json::Str(r.arch.name().into())),
+                ("metrics".into(), r.summary.to_json()),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::Str("dae-spec-profile/v1".into())),
+        ("kernel".into(), Json::Str(kernel.into())),
+        ("seed".into(), Json::Num(seed as f64)),
+        ("results".into(), Json::Arr(results)),
+    ])
+}
+
+/// Convenience: profile `kernel` across `archs` and fold into the
+/// `dae-spec-profile/v1` document (what `--json` prints).
+pub fn profile_json(
+    kernel: &str,
+    seed: u64,
+    misspec: Option<f64>,
+    archs: &[Arch],
+    cfg: &MachineConfig,
+) -> Result<Json> {
+    let runs: Vec<ProfileRun> = archs
+        .iter()
+        .map(|&a| profile_kernel(kernel, seed, misspec, a, cfg))
+        .collect::<Result<_>>()?;
+    Ok(profile_doc(kernel, seed, &runs))
+}
+
+/// `BASE.json` + `DAE` → `BASE.dae.json` (arch inserted before the
+/// extension so the per-arch traces sort next to each other).
+fn perfetto_path(base: &str, arch: &str) -> String {
+    let arch = arch.to_lowercase();
+    match base.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.{arch}.json"),
+        None => format!("{base}.{arch}.json"),
+    }
+}
+
+pub fn cmd_profile(args: &Args) -> Result<()> {
+    let kernel = args.get("kernel").unwrap_or("hist");
+    let seed = args.get_u64("seed", 2026);
+    let misspec = args.get("misspec").and_then(|s| s.parse().ok());
+    let archs = super::parse_archs(Some(args.get("arch").unwrap_or("sta,dae,spec")))?;
+    let mut cfg = MachineConfig::default();
+    super::apply_watchdog_knobs(&mut cfg, args);
+
+    let runs: Vec<ProfileRun> = archs
+        .iter()
+        .map(|&a| profile_kernel(kernel, seed, misspec, a, &cfg))
+        .collect::<Result<_>>()?;
+
+    if let Some(base) = args.get("perfetto") {
+        for r in &runs {
+            let path = perfetto_path(base, r.arch.name());
+            std::fs::write(&path, r.perfetto.render())
+                .with_context(|| format!("profile: writing {path}"))?;
+            println!("wrote {path} — open at https://ui.perfetto.dev");
+        }
+    }
+
+    let want_json = args.has_flag("json");
+    let out = args.get("out");
+    if want_json || out.is_some() {
+        let text = profile_doc(kernel, seed, &runs).render();
+        if let Some(path) = out {
+            std::fs::write(path, &text).with_context(|| format!("profile: writing {path}"))?;
+            println!("wrote {path}");
+        }
+        if want_json {
+            print!("{text}");
+        }
+    } else {
+        for r in &runs {
+            println!("==== {} / {} ====", kernel, r.arch.name());
+            print!("{}", r.summary.render());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn perfetto_path_inserts_arch_before_extension() {
+        assert_eq!(super::perfetto_path("trace.json", "SPEC"), "trace.spec.json");
+        assert_eq!(super::perfetto_path("trace", "DAE"), "trace.dae.json");
+    }
+}

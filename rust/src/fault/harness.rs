@@ -106,6 +106,28 @@ pub fn check_plan(
     Ok(None)
 }
 
+/// Re-run a confirmed failure's *minimized* plan with tracing and
+/// metrics forced on and export the run as a Chrome/Perfetto
+/// `trace_event` document (open at <https://ui.perfetto.dev>), so a
+/// divergence ships with a visual timeline next to its replay seed.
+/// The run is expected to fail or diverge again — the partial trace of
+/// whatever executed is exactly what gets exported.
+pub fn failure_perfetto(f: &FuzzFailure, cfg: &MachineConfig) -> Result<crate::util::Json> {
+    let plan = &f.minimized;
+    let w = crate::coordinator::build_workload(&f.kernel, plan.seed, plan.misspec)?;
+    let c = build(&w.module, 0, f.arch)
+        .with_context(|| format!("{}/{}", f.kernel, f.arch.name()))?;
+    let mut fcfg = cfg.clone();
+    fcfg.trace = true;
+    fcfg.metrics = true;
+    fcfg.fault = Some(FaultInjector::new(plan.clone()));
+    let mut sess = SimSession::new(&c, &fcfg, w.memory.clone())?;
+    let _ = sess.run(&w.args);
+    let label = format!("{}/{} plan #{} (minimized)", f.kernel, f.arch.name(), f.plan_index);
+    sess.perfetto(&label)
+        .ok_or_else(|| anyhow::anyhow!("trace missing from re-profiled failure run"))
+}
+
 /// Greedily shrink a failing plan: drop events one at a time, then the
 /// mis-speculation override, keeping each removal only if the failure
 /// still reproduces on the same kernel × arch cell.

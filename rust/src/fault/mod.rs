@@ -19,7 +19,7 @@ pub mod harness;
 pub mod plan;
 
 pub use harness::{
-    apply_semantic_mutation, check_plan, fuzz_kernel, fuzz_sweep, lint_cross_validate,
-    minimize_plan, FuzzFailure, FuzzOutcome, SemanticMutation,
+    apply_semantic_mutation, check_plan, failure_perfetto, fuzz_kernel, fuzz_sweep,
+    lint_cross_validate, minimize_plan, FuzzFailure, FuzzOutcome, SemanticMutation,
 };
 pub use plan::{FaultEvent, FaultInjector, FaultPlan, FaultSite};

@@ -38,6 +38,9 @@
 //!   in debug builds the way `ir::verify` does; the fuzz harness
 //!   cross-validates that every injectable semantic mutation (dropped
 //!   poison, dropped push, dropped produce) is flagged statically.
+//! - [`metrics`] — the observability layer: always-available,
+//!   zero-cost-when-off telemetry collected inside the simulator (see
+//!   the *Observability* section below).
 //! - [`util`] — PRNG, mini CLI, bench + property-test harnesses (the
 //!   offline build has no clap/criterion/proptest).
 //!
@@ -93,12 +96,53 @@
 //!   with a documented contention caveat).
 //!
 //! Measure with `dae-spec bench` (writes `BENCH_sim.json`, schema
-//! `dae-spec-bench/v2` with mean/min/median per cell); compare against
-//! a saved run with
+//! `dae-spec-bench/v3` with mean/min/median plus a metrics summary per
+//! cell); compare against a saved run with
 //! `dae-spec bench --baseline BENCH_sim.json --max-regress 10`, which
 //! fails if any kernel × arch cell's best time regresses by more than
 //! the given percentage, or rewrite the committed baseline from fresh
-//! measurements with `--refresh-baseline`.
+//! measurements with `--refresh-baseline` (the reader accepts schemas
+//! v1–v3).
+//!
+//! # Observability
+//!
+//! `MachineConfig::metrics` turns on the [`metrics`] layer: telemetry
+//! collected inside the simulator that observes the timestamp-dataflow
+//! machine without perturbing it — cycles, memory and commit logs stay
+//! bit-identical with metrics on or off, on every kernel × arch
+//! (pinned by `rust/tests/metrics.rs`), and the collected numbers are
+//! deterministic (same seed → byte-identical `profile --json`). What
+//! is collected:
+//!
+//! - **Per-unit cycle accounting** — busy (dynamic instructions),
+//!   blocked-on-pop cycles attributed per channel (how long the AGU or
+//!   CU idled waiting for each FIFO), blocked-on-push events (full
+//!   FIFOs parking a producer) and an idle estimate.
+//! - **Per-channel occupancy** — high-water marks, log2-bucketed
+//!   occupancy histograms, push/pop/poison counts.
+//! - **LSQ fill and residency** — admissions, window high-water mark,
+//!   mean residency, and the cycles of mis-speculated store residency
+//!   discarded by poisons.
+//! - **Speculation counters** — speculated store/load requests issued,
+//!   poisons, poison rate, total and per array.
+//! - **Decoupling slack** — the paper-level derived metric: the AGU's
+//!   lead over the CU, measured at every Lemma 6.1 store pairing as
+//!   `t(value arrival) − t(request arrival)` cycles, plus the
+//!   in-flight request count at that moment (min/mean/max and sampled
+//!   tracks per array). Positive slack *is* decoupling; DAE's LoD
+//!   synchronisation collapses it, SPEC's speculation restores it.
+//! - **MLP** — mean outstanding loads (Σ load latency / cycles).
+//!
+//! Surfaces: `dae-spec profile --kernel K --arch sta,dae,spec`
+//! (human-readable report; `--json` for the machine-readable schema
+//! `dae-spec-profile/v1`; `--out FILE` to write it), per-cell
+//! `metrics` objects in `BENCH_sim.json`, metrics snapshots inside
+//! stall diagnostics, and Chrome/Perfetto trace export:
+//! `dae-spec profile --perfetto BASE.json` writes one
+//! `BASE.<arch>.json` trace-event document per architecture — open it
+//! at <https://ui.perfetto.dev> to see unit lanes, poison instants and
+//! occupancy/slack counter tracks. `dae-spec fuzz` dumps the same
+//! document for every minimized failing plan next to its replay seed.
 
 pub mod analysis;
 pub mod area;
@@ -106,6 +150,7 @@ pub mod coordinator;
 pub mod fault;
 pub mod ir;
 pub mod lint;
+pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,838 @@
+//! Decoupling telemetry — the observability layer of the simulator.
+//!
+//! The timing model in [`crate::sim`] is a timestamp-dataflow machine:
+//! every cycle number is computed from data dependencies, never from
+//! host scheduling. That makes observation safe by construction — the
+//! collectors in this module only *read* what the machine was going to
+//! do anyway, so enabling them (`MachineConfig::metrics`) leaves
+//! cycles, memory and commit logs bit-identical (pinned by
+//! `rust/tests/metrics.rs`). With metrics off the hooks compile to a
+//! single `Option` discriminant test on cold paths.
+//!
+//! What is measured:
+//!
+//! - **Per-unit cycle accounting** — busy (dynamic instructions),
+//!   blocked-on-pop (cycles a consumer idled waiting for data,
+//!   attributed per channel), blocked-on-push (events where a full
+//!   FIFO parked its producer) and an idle estimate
+//!   (`cycles − busy − blocked_pop`, saturating).
+//! - **Per-channel occupancy** — log2-bucketed occupancy histogram
+//!   sampled at every push, high-water mark, push/pop/poison counts
+//!   and a decimated occupancy [`CounterTrack`] for trace export.
+//! - **LSQ fill/residency** — admissions by kind, window high-water
+//!   mark, mean residency (admission → commit/poison/load-done) and
+//!   the cycles of mis-speculated work discarded by poisons.
+//! - **Speculation counters** — speculatively hoisted store/load
+//!   requests issued, poisons produced, and the poison rate, total and
+//!   per array.
+//! - **Decoupling slack** — the paper-level derived metric: how far
+//!   the AGU runs ahead of the CU, measured at every Lemma 6.1 store
+//!   pairing as `t(value arrival) − t(request arrival)` in cycles,
+//!   plus the in-flight request count (LSQ window occupancy) at that
+//!   moment; min/mean/max and sampled tracks per array.
+//! - **MLP** — mean outstanding loads: the sum of all load latencies
+//!   divided by total cycles (a load occupying the memory system for
+//!   `l` cycles contributes `l` cycle-slots of parallelism).
+//!
+//! Surfaces: `dae-spec profile` (human report + `--json`), the
+//! Chrome/Perfetto exporter in [`perfetto`] (open the written JSON at
+//! <https://ui.perfetto.dev>), and the `MetricsSummary` embedded per
+//! cell in `BENCH_sim.json` (schema `dae-spec-bench/v3`).
+
+pub mod perfetto;
+
+use crate::util::Json;
+
+/// Number of log2 occupancy-histogram buckets: 0, 1, 2-3, 4-7, 8-15,
+/// 16-31, 32-63, 64+.
+pub const OCC_BUCKETS: usize = 8;
+
+/// Retained-sample cap per [`CounterTrack`] before decimation.
+const TRACK_CAP: usize = 2048;
+
+#[inline]
+fn occ_bucket(occ: usize) -> usize {
+    if occ == 0 {
+        0
+    } else {
+        ((usize::BITS - occ.leading_zeros()) as usize).min(OCC_BUCKETS - 1)
+    }
+}
+
+/// Human label of occupancy-histogram bucket `i`.
+pub fn occ_bucket_label(i: usize) -> &'static str {
+    ["0", "1", "2-3", "4-7", "8-15", "16-31", "32-63", "64+"][i]
+}
+
+/// A bounded, deterministically decimated time series of counter
+/// samples for trace export ("sampled per N cycles" with adaptive N).
+///
+/// Every offered sample is counted; only every `stride`-th is
+/// retained. When the retained set reaches [`TRACK_CAP`] it is thinned
+/// to every other sample and the stride doubles — so the memory bound
+/// is fixed, and because decimation is driven by the sample *index*
+/// (never by host time), the retained set is a pure function of the
+/// offered sequence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterTrack {
+    samples: Vec<(u64, i64)>,
+    stride: u64,
+    idx: u64,
+}
+
+impl Default for CounterTrack {
+    fn default() -> Self {
+        CounterTrack { samples: Vec::new(), stride: 1, idx: 0 }
+    }
+}
+
+impl CounterTrack {
+    pub fn reset(&mut self) {
+        self.samples.clear();
+        self.stride = 1;
+        self.idx = 0;
+    }
+
+    /// Offer a sample: value `v` observed at cycle `t`.
+    #[inline]
+    pub fn push(&mut self, t: u64, v: i64) {
+        if self.idx % self.stride == 0 {
+            self.samples.push((t, v));
+            if self.samples.len() >= TRACK_CAP {
+                let mut w = 0;
+                for r in (0..self.samples.len()).step_by(2) {
+                    self.samples[w] = self.samples[r];
+                    w += 1;
+                }
+                self.samples.truncate(w);
+                self.stride *= 2;
+            }
+        }
+        self.idx += 1;
+    }
+
+    /// Retained `(cycle, value)` samples, in offer order.
+    pub fn samples(&self) -> &[(u64, i64)] {
+        &self.samples
+    }
+
+    /// Current decimation stride (1 = every offered sample retained).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+}
+
+/// Raw per-channel collectors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChanMetrics {
+    pub pushes: u64,
+    pub pops: u64,
+    pub poison_pushes: u64,
+    /// High-water occupancy (elements queued right after a push).
+    pub hwm: usize,
+    /// Log2-bucketed occupancy histogram, sampled at every push.
+    pub occ_hist: [u64; OCC_BUCKETS],
+    /// Events where a full FIFO parked its producer (functional
+    /// backpressure; counted once per parking, not per retry).
+    pub producer_blocks: u64,
+    /// Cycles the consumer spent waiting for data to arrive.
+    pub consumer_wait_cycles: u64,
+    pub occ_track: CounterTrack,
+}
+
+/// Raw per-array LSQ collectors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LsqMetrics {
+    pub admitted_loads: u64,
+    pub admitted_stores: u64,
+    pub commits: u64,
+    pub poisons: u64,
+    /// High-water window occupancy at admission.
+    pub window_hwm: usize,
+    /// Total residency (admission → commit / poison / load-done).
+    pub residency_sum: u64,
+    /// Residency of poisoned (discarded) store requests only.
+    pub poison_residency_sum: u64,
+    /// Requests that left the window (denominator of mean residency).
+    pub resolved: u64,
+}
+
+/// Raw per-array decoupling-slack collectors, sampled at every
+/// Lemma 6.1 store pairing in the DU.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlackMetrics {
+    pub pairings: u64,
+    /// Signed slack sum: `t(value) − t(request)` per pairing.
+    pub slack_sum: i64,
+    pub slack_min: i64,
+    pub slack_max: i64,
+    /// LSQ window occupancy (in-flight requests) at each pairing.
+    pub inflight_sum: u64,
+    pub inflight_max: usize,
+    pub slack_track: CounterTrack,
+    pub inflight_track: CounterTrack,
+}
+
+impl Default for SlackMetrics {
+    fn default() -> Self {
+        SlackMetrics {
+            pairings: 0,
+            slack_sum: 0,
+            slack_min: i64::MAX,
+            slack_max: i64::MIN,
+            inflight_sum: 0,
+            inflight_max: 0,
+            slack_track: CounterTrack::default(),
+            inflight_track: CounterTrack::default(),
+        }
+    }
+}
+
+/// All raw collectors of one run. Owned by `SimSession`, threaded
+/// through the machine as `&mut Option<Metrics>` so that `None`
+/// (metrics off) costs one discriminant test per hook site.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    pub chans: Vec<ChanMetrics>,
+    pub lsqs: Vec<LsqMetrics>,
+    pub slack: Vec<SlackMetrics>,
+    /// Loads issued to memory (STA ports and DU LSQ alike).
+    pub loads_issued: u64,
+    /// Sum of load latencies — MLP numerator.
+    pub load_lat_sum: u64,
+}
+
+impl Metrics {
+    pub fn new(n_chans: usize, n_arrays: usize) -> Metrics {
+        Metrics {
+            chans: vec![ChanMetrics::default(); n_chans],
+            lsqs: vec![LsqMetrics::default(); n_arrays],
+            slack: vec![SlackMetrics::default(); n_arrays],
+            loads_issued: 0,
+            load_lat_sum: 0,
+        }
+    }
+
+    /// Reset all counters in place (capacity retained) — run on entry
+    /// by `SimSession::run`, so a failed run never leaks counts into
+    /// the next one.
+    pub fn reset(&mut self) {
+        for c in &mut self.chans {
+            let occ_track = std::mem::take(&mut c.occ_track);
+            *c = ChanMetrics { occ_track, ..ChanMetrics::default() };
+            c.occ_track.reset();
+        }
+        for l in &mut self.lsqs {
+            *l = LsqMetrics::default();
+        }
+        for s in &mut self.slack {
+            let slack_track = std::mem::take(&mut s.slack_track);
+            let inflight_track = std::mem::take(&mut s.inflight_track);
+            *s = SlackMetrics { slack_track, inflight_track, ..SlackMetrics::default() };
+            s.slack_track.reset();
+            s.inflight_track.reset();
+        }
+        self.loads_issued = 0;
+        self.load_lat_sum = 0;
+    }
+
+    /// A push of arrival time `t` completed; `occ` is the occupancy
+    /// right after it.
+    #[inline]
+    pub fn on_push(&mut self, chan: u32, occ: usize, t: u64, poison: bool) {
+        let c = &mut self.chans[chan as usize];
+        c.pushes += 1;
+        if poison {
+            c.poison_pushes += 1;
+        }
+        c.hwm = c.hwm.max(occ);
+        c.occ_hist[occ_bucket(occ)] += 1;
+        c.occ_track.push(t, occ as i64);
+    }
+
+    /// A full FIFO parked its producer.
+    #[inline]
+    pub fn on_push_blocked(&mut self, chan: u32) {
+        self.chans[chan as usize].producer_blocks += 1;
+    }
+
+    /// A pop completed; `occ` is the occupancy right after it, `wait`
+    /// the cycles the consumer idled for the element to arrive.
+    #[inline]
+    pub fn on_pop(&mut self, chan: u32, occ: usize, t: u64, wait: u64) {
+        let c = &mut self.chans[chan as usize];
+        c.pops += 1;
+        c.consumer_wait_cycles += wait;
+        c.occ_track.push(t, occ as i64);
+    }
+
+    /// A request entered an LSQ window (`window` = occupancy after).
+    #[inline]
+    pub fn on_admit(&mut self, arr: u32, is_store: bool, window: usize) {
+        let l = &mut self.lsqs[arr as usize];
+        if is_store {
+            l.admitted_stores += 1;
+        } else {
+            l.admitted_loads += 1;
+        }
+        l.window_hwm = l.window_hwm.max(window);
+    }
+
+    /// A store request paired with its value (Lemma 6.1 rendezvous):
+    /// the decoupling-slack sample point.
+    #[inline]
+    pub fn on_store_pair(&mut self, arr: u32, t_req: u64, t_val: u64, inflight: usize) {
+        let s = &mut self.slack[arr as usize];
+        let slack = t_val as i64 - t_req as i64;
+        s.pairings += 1;
+        s.slack_sum += slack;
+        s.slack_min = s.slack_min.min(slack);
+        s.slack_max = s.slack_max.max(slack);
+        s.inflight_sum += inflight as u64;
+        s.inflight_max = s.inflight_max.max(inflight);
+        s.slack_track.push(t_val, slack);
+        s.inflight_track.push(t_val, inflight as i64);
+    }
+
+    /// A store committed after `residency` cycles in the window.
+    #[inline]
+    pub fn on_store_commit(&mut self, arr: u32, residency: u64) {
+        let l = &mut self.lsqs[arr as usize];
+        l.commits += 1;
+        l.residency_sum += residency;
+        l.resolved += 1;
+    }
+
+    /// A poisoned store was discarded after `residency` cycles — that
+    /// residency is the mis-speculated work thrown away.
+    #[inline]
+    pub fn on_store_poison(&mut self, arr: u32, residency: u64) {
+        let l = &mut self.lsqs[arr as usize];
+        l.poisons += 1;
+        l.residency_sum += residency;
+        l.poison_residency_sum += residency;
+        l.resolved += 1;
+    }
+
+    /// A load occupied the memory system for `lat` cycles (MLP).
+    #[inline]
+    pub fn on_load_issue(&mut self, lat: u64) {
+        self.loads_issued += 1;
+        self.load_lat_sum += lat;
+    }
+
+    /// A load left an LSQ window after `residency` cycles.
+    #[inline]
+    pub fn on_load_done(&mut self, arr: u32, residency: u64) {
+        let l = &mut self.lsqs[arr as usize];
+        l.residency_sum += residency;
+        l.resolved += 1;
+    }
+}
+
+/// Static producer/consumer unit of a channel — known from the channel
+/// kind, so blocked cycles attribute per unit without runtime ids.
+#[derive(Clone, Copy, Debug)]
+pub struct ChanRole {
+    pub producer: &'static str,
+    pub consumer: &'static str,
+}
+
+/// Everything `Metrics::summarize` needs that the collectors don't
+/// carry themselves: names, roles, run length and per-mem statistics.
+pub struct SummaryEnv<'a> {
+    pub cycles: u64,
+    /// `(unit name, dynamic instructions)` per stepped unit.
+    pub units: &'a [(String, u64)],
+    pub chan_names: Vec<String>,
+    pub chan_roles: Vec<ChanRole>,
+    pub array_names: Vec<String>,
+    /// Dense per mem-op `(requests, poisons)`.
+    pub per_mem: &'a [(u64, u64)],
+    /// Static mem-op ids speculatively hoisted as stores / loads
+    /// (SPEC builds; empty otherwise).
+    pub spec_store_mems: &'a [u32],
+    pub spec_load_mems: &'a [u32],
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnitSummary {
+    pub unit: String,
+    /// Dynamic instructions executed (busy cycles).
+    pub busy_instrs: u64,
+    /// Cycles spent waiting for channel data, summed over channels.
+    pub blocked_pop_cycles: u64,
+    /// Times a full FIFO parked this unit as producer.
+    pub blocked_push_events: u64,
+    /// `cycles − busy − blocked_pop`, saturating — an estimate, since
+    /// busy and blocked can overlap in a dataflow timing model.
+    pub idle_cycles_est: u64,
+    /// Blocked-on-pop attribution: `(channel name, cycles)`, nonzero
+    /// entries only.
+    pub blocked_by: Vec<(String, u64)>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChanSummary {
+    pub name: String,
+    pub producer: String,
+    pub consumer: String,
+    pub pushes: u64,
+    pub pops: u64,
+    pub poison_pushes: u64,
+    pub hwm: usize,
+    pub occ_hist: [u64; OCC_BUCKETS],
+    pub producer_blocks: u64,
+    pub consumer_wait_cycles: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct LsqSummary {
+    pub array: String,
+    pub admitted_loads: u64,
+    pub admitted_stores: u64,
+    pub commits: u64,
+    pub poisons: u64,
+    pub window_hwm: usize,
+    pub mean_residency: f64,
+    /// Cycles of mis-speculated store residency discarded by poisons.
+    pub discarded_cycles: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlackSummary {
+    pub array: String,
+    pub pairings: u64,
+    /// Mean AGU lead over the CU in cycles (positive = AGU ahead).
+    pub mean_slack: f64,
+    pub min_slack: i64,
+    pub max_slack: i64,
+    /// Mean in-flight requests in the LSQ window at pairing time.
+    pub mean_inflight: f64,
+    pub max_inflight: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpecArraySummary {
+    pub array: String,
+    /// Store requests admitted for this array (SPEC: all speculated).
+    pub store_reqs: u64,
+    pub poisons: u64,
+    pub poison_rate: f64,
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpecSummary {
+    /// Requests issued by speculatively hoisted stores / loads.
+    pub spec_store_reqs: u64,
+    pub spec_load_reqs: u64,
+    pub poisons: u64,
+    /// Σ residency of poisoned stores — mis-speculated work discarded.
+    pub discarded_cycles: u64,
+    /// `poisons / spec_store_reqs`.
+    pub poison_rate: f64,
+    pub per_array: Vec<SpecArraySummary>,
+}
+
+/// The folded, name-resolved summary of one run — what `profile`
+/// prints, `BENCH_sim.json` embeds and `StallDiagnostic` snapshots.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSummary {
+    pub cycles: u64,
+    /// Mean outstanding loads (Σ load latency / cycles).
+    pub mlp: f64,
+    pub loads_issued: u64,
+    pub units: Vec<UnitSummary>,
+    pub channels: Vec<ChanSummary>,
+    pub lsqs: Vec<LsqSummary>,
+    pub slack: Vec<SlackSummary>,
+    pub speculation: SpecSummary,
+}
+
+impl Metrics {
+    /// Fold the raw collectors into a [`MetricsSummary`].
+    pub fn summarize(&self, env: &SummaryEnv) -> MetricsSummary {
+        let units = env
+            .units
+            .iter()
+            .map(|(name, instrs)| {
+                let mut blocked_by: Vec<(String, u64)> = Vec::new();
+                let mut blocked_pop = 0u64;
+                let mut blocked_push = 0u64;
+                for (i, c) in self.chans.iter().enumerate() {
+                    let role = env.chan_roles[i];
+                    if role.consumer == name.as_str() && c.consumer_wait_cycles > 0 {
+                        blocked_by.push((env.chan_names[i].clone(), c.consumer_wait_cycles));
+                        blocked_pop += c.consumer_wait_cycles;
+                    }
+                    if role.producer == name.as_str() {
+                        blocked_push += c.producer_blocks;
+                    }
+                }
+                UnitSummary {
+                    unit: name.clone(),
+                    busy_instrs: *instrs,
+                    blocked_pop_cycles: blocked_pop,
+                    blocked_push_events: blocked_push,
+                    idle_cycles_est: env.cycles.saturating_sub(*instrs + blocked_pop),
+                    blocked_by,
+                }
+            })
+            .collect();
+
+        let channels = self
+            .chans
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.pushes + c.pops + c.producer_blocks > 0)
+            .map(|(i, c)| ChanSummary {
+                name: env.chan_names[i].clone(),
+                producer: env.chan_roles[i].producer.to_string(),
+                consumer: env.chan_roles[i].consumer.to_string(),
+                pushes: c.pushes,
+                pops: c.pops,
+                poison_pushes: c.poison_pushes,
+                hwm: c.hwm,
+                occ_hist: c.occ_hist,
+                producer_blocks: c.producer_blocks,
+                consumer_wait_cycles: c.consumer_wait_cycles,
+            })
+            .collect();
+
+        let lsqs: Vec<LsqSummary> = self
+            .lsqs
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.admitted_loads + l.admitted_stores > 0)
+            .map(|(i, l)| LsqSummary {
+                array: env.array_names[i].clone(),
+                admitted_loads: l.admitted_loads,
+                admitted_stores: l.admitted_stores,
+                commits: l.commits,
+                poisons: l.poisons,
+                window_hwm: l.window_hwm,
+                mean_residency: ratio(l.residency_sum, l.resolved),
+                discarded_cycles: l.poison_residency_sum,
+            })
+            .collect();
+
+        let slack = self
+            .slack
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.pairings > 0)
+            .map(|(i, s)| SlackSummary {
+                array: env.array_names[i].clone(),
+                pairings: s.pairings,
+                mean_slack: s.slack_sum as f64 / s.pairings as f64,
+                min_slack: s.slack_min,
+                max_slack: s.slack_max,
+                mean_inflight: ratio(s.inflight_sum, s.pairings),
+                max_inflight: s.inflight_max,
+            })
+            .collect();
+
+        let sum_mems = |mems: &[u32], which: fn(&(u64, u64)) -> u64| -> u64 {
+            mems.iter()
+                .filter_map(|&m| env.per_mem.get(m as usize))
+                .map(which)
+                .sum()
+        };
+        let spec_store_reqs = sum_mems(env.spec_store_mems, |p| p.0);
+        let spec_load_reqs = sum_mems(env.spec_load_mems, |p| p.0);
+        let poisons: u64 = self.lsqs.iter().map(|l| l.poisons).sum();
+        let per_array = self
+            .lsqs
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.poisons > 0)
+            .map(|(i, l)| SpecArraySummary {
+                array: env.array_names[i].clone(),
+                store_reqs: l.admitted_stores,
+                poisons: l.poisons,
+                poison_rate: ratio(l.poisons, l.admitted_stores),
+            })
+            .collect();
+        let speculation = SpecSummary {
+            spec_store_reqs,
+            spec_load_reqs,
+            poisons,
+            discarded_cycles: self.lsqs.iter().map(|l| l.poison_residency_sum).sum(),
+            poison_rate: ratio(poisons, spec_store_reqs),
+            per_array,
+        };
+
+        MetricsSummary {
+            cycles: env.cycles,
+            mlp: ratio(self.load_lat_sum, env.cycles),
+            loads_issued: self.loads_issued,
+            units,
+            channels,
+            lsqs,
+            slack,
+            speculation,
+        }
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+impl MetricsSummary {
+    /// Machine-readable form, rendered via [`crate::util::Json`] —
+    /// insertion-ordered keys, so same collectors → byte-identical
+    /// output.
+    pub fn to_json(&self) -> Json {
+        let units = self
+            .units
+            .iter()
+            .map(|u| {
+                Json::Obj(vec![
+                    ("unit".into(), Json::Str(u.unit.clone())),
+                    ("busy_instrs".into(), num(u.busy_instrs)),
+                    ("blocked_pop_cycles".into(), num(u.blocked_pop_cycles)),
+                    ("blocked_push_events".into(), num(u.blocked_push_events)),
+                    ("idle_cycles_est".into(), num(u.idle_cycles_est)),
+                    (
+                        "blocked_by".into(),
+                        Json::Obj(
+                            u.blocked_by
+                                .iter()
+                                .map(|(chan, cyc)| (chan.clone(), num(*cyc)))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let channels = self
+            .channels
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(c.name.clone())),
+                    ("producer".into(), Json::Str(c.producer.clone())),
+                    ("consumer".into(), Json::Str(c.consumer.clone())),
+                    ("pushes".into(), num(c.pushes)),
+                    ("pops".into(), num(c.pops)),
+                    ("poison_pushes".into(), num(c.poison_pushes)),
+                    ("hwm".into(), num(c.hwm as u64)),
+                    (
+                        "occ_hist".into(),
+                        Json::Arr(c.occ_hist.iter().map(|&v| num(v)).collect()),
+                    ),
+                    ("producer_blocks".into(), num(c.producer_blocks)),
+                    ("consumer_wait_cycles".into(), num(c.consumer_wait_cycles)),
+                ])
+            })
+            .collect();
+        let lsqs = self
+            .lsqs
+            .iter()
+            .map(|l| {
+                Json::Obj(vec![
+                    ("array".into(), Json::Str(l.array.clone())),
+                    ("admitted_loads".into(), num(l.admitted_loads)),
+                    ("admitted_stores".into(), num(l.admitted_stores)),
+                    ("commits".into(), num(l.commits)),
+                    ("poisons".into(), num(l.poisons)),
+                    ("window_hwm".into(), num(l.window_hwm as u64)),
+                    ("mean_residency".into(), Json::Num(l.mean_residency)),
+                    ("discarded_cycles".into(), num(l.discarded_cycles)),
+                ])
+            })
+            .collect();
+        let slack = self
+            .slack
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("array".into(), Json::Str(s.array.clone())),
+                    ("pairings".into(), num(s.pairings)),
+                    ("mean_slack".into(), Json::Num(s.mean_slack)),
+                    ("min_slack".into(), Json::Num(s.min_slack as f64)),
+                    ("max_slack".into(), Json::Num(s.max_slack as f64)),
+                    ("mean_inflight".into(), Json::Num(s.mean_inflight)),
+                    ("max_inflight".into(), num(s.max_inflight as u64)),
+                ])
+            })
+            .collect();
+        let spec = &self.speculation;
+        let per_array = spec
+            .per_array
+            .iter()
+            .map(|a| {
+                Json::Obj(vec![
+                    ("array".into(), Json::Str(a.array.clone())),
+                    ("store_reqs".into(), num(a.store_reqs)),
+                    ("poisons".into(), num(a.poisons)),
+                    ("poison_rate".into(), Json::Num(a.poison_rate)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("cycles".into(), num(self.cycles)),
+            ("mlp".into(), Json::Num(self.mlp)),
+            ("loads_issued".into(), num(self.loads_issued)),
+            ("units".into(), Json::Arr(units)),
+            ("channels".into(), Json::Arr(channels)),
+            ("lsqs".into(), Json::Arr(lsqs)),
+            ("slack".into(), Json::Arr(slack)),
+            (
+                "speculation".into(),
+                Json::Obj(vec![
+                    ("spec_store_reqs".into(), num(spec.spec_store_reqs)),
+                    ("spec_load_reqs".into(), num(spec.spec_load_reqs)),
+                    ("poisons".into(), num(spec.poisons)),
+                    ("discarded_cycles".into(), num(spec.discarded_cycles)),
+                    ("poison_rate".into(), Json::Num(spec.poison_rate)),
+                    ("per_array".into(), Json::Arr(per_array)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable report (what `dae-spec profile` prints).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "cycles: {}   mlp: {:.3}   loads issued: {}", self.cycles, self.mlp, self.loads_issued);
+        let _ = writeln!(s, "units:");
+        for u in &self.units {
+            let _ = writeln!(
+                s,
+                "  {:<4} busy={:<10} blocked-pop={:<10} push-blocks={:<6} idle~{}",
+                u.unit, u.busy_instrs, u.blocked_pop_cycles, u.blocked_push_events, u.idle_cycles_est
+            );
+            for (chan, cyc) in &u.blocked_by {
+                let _ = writeln!(s, "       waited {cyc:>10} cycle(s) on {chan}");
+            }
+        }
+        if !self.channels.is_empty() {
+            let _ = writeln!(s, "channels:");
+            for c in &self.channels {
+                let _ = writeln!(
+                    s,
+                    "  {:<24} {}->{}  push={} pop={} poison={} hwm={} prod-blocks={}",
+                    c.name, c.producer, c.consumer, c.pushes, c.pops, c.poison_pushes, c.hwm, c.producer_blocks
+                );
+                let hist: Vec<String> = c
+                    .occ_hist
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, v)| **v > 0)
+                    .map(|(i, v)| format!("{}:{v}", occ_bucket_label(i)))
+                    .collect();
+                let _ = writeln!(s, "       occupancy {{{}}}", hist.join(" "));
+            }
+        }
+        if !self.lsqs.is_empty() {
+            let _ = writeln!(s, "lsqs:");
+            for l in &self.lsqs {
+                let _ = writeln!(
+                    s,
+                    "  @{:<10} loads={} stores={} commits={} poisons={} hwm={} residency~{:.1} discarded={}",
+                    l.array, l.admitted_loads, l.admitted_stores, l.commits, l.poisons, l.window_hwm,
+                    l.mean_residency, l.discarded_cycles
+                );
+            }
+        }
+        if !self.slack.is_empty() {
+            let _ = writeln!(s, "decoupling slack (AGU lead over CU, cycles):");
+            for sl in &self.slack {
+                let _ = writeln!(
+                    s,
+                    "  @{:<10} pairings={} mean={:.1} min={} max={} inflight mean={:.1} max={}",
+                    sl.array, sl.pairings, sl.mean_slack, sl.min_slack, sl.max_slack, sl.mean_inflight,
+                    sl.max_inflight
+                );
+            }
+        }
+        let sp = &self.speculation;
+        let _ = writeln!(
+            s,
+            "speculation: store-reqs={} load-reqs={} poisons={} rate={:.4} discarded={} cycle(s)",
+            sp.spec_store_reqs, sp.spec_load_reqs, sp.poisons, sp.poison_rate, sp.discarded_cycles
+        );
+        for a in &sp.per_array {
+            let _ = writeln!(s, "  @{:<10} store-reqs={} poisons={} rate={:.4}", a.array, a.store_reqs, a.poisons, a.poison_rate);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_track_decimates_deterministically() {
+        let mut a = CounterTrack::default();
+        let mut b = CounterTrack::default();
+        for i in 0..100_000u64 {
+            a.push(i, i as i64);
+            b.push(i, i as i64);
+        }
+        assert_eq!(a, b);
+        assert!(a.samples().len() < TRACK_CAP);
+        assert!(a.stride() > 1);
+        // retained samples are a subsequence of the offered one
+        let mut last = None;
+        for &(t, v) in a.samples() {
+            assert_eq!(t as i64, v);
+            if let Some(p) = last {
+                assert!(t > p);
+            }
+            last = Some(t);
+        }
+        // first offered sample always survives decimation
+        assert_eq!(a.samples()[0], (0, 0));
+    }
+
+    #[test]
+    fn counter_track_reset_restores_fresh_state() {
+        let mut t = CounterTrack::default();
+        for i in 0..10_000u64 {
+            t.push(i, 1);
+        }
+        t.reset();
+        assert_eq!(t, CounterTrack::default());
+    }
+
+    #[test]
+    fn occ_buckets_cover_the_range() {
+        assert_eq!(occ_bucket(0), 0);
+        assert_eq!(occ_bucket(1), 1);
+        assert_eq!(occ_bucket(2), 2);
+        assert_eq!(occ_bucket(3), 2);
+        assert_eq!(occ_bucket(4), 3);
+        assert_eq!(occ_bucket(7), 3);
+        assert_eq!(occ_bucket(63), 6);
+        assert_eq!(occ_bucket(64), 7);
+        assert_eq!(occ_bucket(usize::MAX), 7);
+    }
+
+    #[test]
+    fn reset_clears_all_counters() {
+        let mut m = Metrics::new(2, 1);
+        m.on_push(0, 1, 5, true);
+        m.on_pop(0, 0, 6, 2);
+        m.on_push_blocked(1);
+        m.on_admit(0, true, 1);
+        m.on_store_pair(0, 5, 9, 1);
+        m.on_store_poison(0, 4);
+        m.on_load_issue(3);
+        m.on_load_done(0, 2);
+        m.reset();
+        assert_eq!(m, Metrics::new(2, 1));
+    }
+}

@@ -1,0 +1,133 @@
+//! Chrome/Perfetto `trace_event` JSON exporter.
+//!
+//! Converts a simulator [`Trace`](crate::sim::Trace) (plus, when
+//! available, the [`Metrics`] collectors) into the JSON Object Format
+//! of the `trace_event` specification, viewable at
+//! <https://ui.perfetto.dev> (or `chrome://tracing`):
+//!
+//! - one thread lane per unit (`agu`, `cu`, `du`, `sta`), named via
+//!   `"M"` metadata events;
+//! - every pipeline event becomes a 1-cycle `"X"` complete event
+//!   (`ts` is the cycle number, interpreted as microseconds — the
+//!   `displayTimeUnit` hint keeps the axis readable);
+//! - poison events become `"i"` instant events with thread scope, so
+//!   mis-speculation shows up as markers over the CU/DU lanes;
+//! - channel occupancy and per-array decoupling-slack/in-flight
+//!   [`CounterTrack`](super::CounterTrack)s become `"C"` counter
+//!   events.
+//!
+//! Output is deterministic: lanes are ordered by first appearance,
+//! events are stably sorted by timestamp, and all JSON keys are
+//! insertion-ordered — same run, byte-identical document.
+
+use super::Metrics;
+use crate::sim::TraceEvent;
+use crate::util::Json;
+
+const PID: f64 = 1.0;
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn counter(name: &str, series: &str, t: u64, v: i64) -> Json {
+    Json::Obj(vec![
+        ("name".into(), s(name)),
+        ("ph".into(), s("C")),
+        ("ts".into(), Json::Num(t as f64)),
+        ("pid".into(), Json::Num(PID)),
+        ("args".into(), Json::Obj(vec![(series.to_string(), Json::Num(v as f64))])),
+    ])
+}
+
+/// Build the `trace_event` document for one run. `metrics` adds the
+/// counter tracks; `chan_names`/`array_names` resolve track labels.
+pub fn export(
+    label: &str,
+    events: &[TraceEvent],
+    metrics: Option<&Metrics>,
+    chan_names: &[String],
+    array_names: &[String],
+) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    out.push(Json::Obj(vec![
+        ("name".into(), s("process_name")),
+        ("ph".into(), s("M")),
+        ("pid".into(), Json::Num(PID)),
+        ("args".into(), Json::Obj(vec![("name".into(), s(label))])),
+    ]));
+
+    // one lane (tid) per unit, ordered by first appearance
+    let mut lanes: Vec<&'static str> = Vec::new();
+    for e in events {
+        if !lanes.contains(&e.unit) {
+            lanes.push(e.unit);
+        }
+    }
+    for (i, unit) in lanes.iter().enumerate() {
+        out.push(Json::Obj(vec![
+            ("name".into(), s("thread_name")),
+            ("ph".into(), s("M")),
+            ("pid".into(), Json::Num(PID)),
+            ("tid".into(), Json::Num((i + 1) as f64)),
+            ("args".into(), Json::Obj(vec![("name".into(), s(unit))])),
+        ]));
+    }
+
+    let mut body: Vec<(u64, Json)> = Vec::with_capacity(events.len());
+    for e in events {
+        let tid = (lanes.iter().position(|u| *u == e.unit).unwrap() + 1) as f64;
+        let name = format!("{} m{}", e.kind, e.mem);
+        let obj = if e.kind.contains("poison") {
+            Json::Obj(vec![
+                ("name".into(), Json::Str(name)),
+                ("cat".into(), s("poison")),
+                ("ph".into(), s("i")),
+                ("s".into(), s("t")),
+                ("ts".into(), Json::Num(e.t as f64)),
+                ("pid".into(), Json::Num(PID)),
+                ("tid".into(), Json::Num(tid)),
+            ])
+        } else {
+            Json::Obj(vec![
+                ("name".into(), Json::Str(name)),
+                ("cat".into(), s(e.kind)),
+                ("ph".into(), s("X")),
+                ("ts".into(), Json::Num(e.t as f64)),
+                ("dur".into(), Json::Num(1.0)),
+                ("pid".into(), Json::Num(PID)),
+                ("tid".into(), Json::Num(tid)),
+            ])
+        };
+        body.push((e.t, obj));
+    }
+
+    if let Some(m) = metrics {
+        for (i, cm) in m.chans.iter().enumerate() {
+            let name = format!("occupancy {}", chan_names[i]);
+            for &(t, v) in cm.occ_track.samples() {
+                body.push((t, counter(&name, "elems", t, v)));
+            }
+        }
+        for (i, sm) in m.slack.iter().enumerate() {
+            let sname = format!("slack @{}", array_names[i]);
+            for &(t, v) in sm.slack_track.samples() {
+                body.push((t, counter(&sname, "cycles", t, v)));
+            }
+            let iname = format!("in-flight @{}", array_names[i]);
+            for &(t, v) in sm.inflight_track.samples() {
+                body.push((t, counter(&iname, "reqs", t, v)));
+            }
+        }
+    }
+
+    // Perfetto tolerates unsorted streams; sorting (stably) makes the
+    // document deterministic and diff-friendly.
+    body.sort_by_key(|(t, _)| *t);
+    out.extend(body.into_iter().map(|(_, j)| j));
+
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(out)),
+        ("displayTimeUnit".into(), s("ns")),
+    ])
+}

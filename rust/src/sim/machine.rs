@@ -26,6 +26,7 @@ use super::{MachineConfig, Memory};
 use crate::fault::FaultInjector;
 use crate::ir::types::Val;
 use crate::ir::{BinOp, Module};
+use crate::metrics::{ChanRole, Metrics, MetricsSummary, SummaryEnv};
 use crate::transform::{Arch, Compiled};
 use crate::util::FxHashMap;
 use anyhow::{anyhow, bail, Result};
@@ -49,6 +50,8 @@ pub struct SimResult {
     pub trace: Option<Trace>,
     /// Committed stores in per-array stream order: (mem, addr, value).
     pub commit_log: Vec<(u32, i64, Val)>,
+    /// Telemetry summary (`MachineConfig::metrics`; see [`crate::metrics`]).
+    pub metrics: Option<MetricsSummary>,
 }
 
 // ---------------------------------------------------------------------------
@@ -143,6 +146,21 @@ impl Channels {
 
     fn front(&self, id: u32) -> Option<&Elem> {
         self.chans[id as usize].q.front()
+    }
+
+    /// Current occupancy of channel `id` (metrics sampling).
+    #[inline]
+    fn len_of(&self, id: u32) -> usize {
+        self.chans[id as usize].q.len()
+    }
+
+    /// `(front arrival time, last pop time)` — what `pop` is about to
+    /// see; lets the metrics layer compute consumer wait without
+    /// perturbing the pop itself.
+    #[inline]
+    fn pop_preview(&self, id: u32) -> Option<(u64, u64)> {
+        let c = &self.chans[id as usize];
+        c.q.front().map(|e| (e.t, c.last_pop))
     }
 
     /// Pop the raw element (admission path — no pop-rate accounting; the
@@ -359,6 +377,14 @@ pub(super) struct SimCtx<'a> {
     pub(super) memory: &'a mut Memory,
     pub(super) max_t: u64,
     pub(super) trace: &'a mut Option<Trace>,
+    /// Telemetry collectors (`None` = metrics off; hooks cost one
+    /// discriminant test). Observation-only: never feeds back into
+    /// timing — pinned by `rust/tests/metrics.rs`.
+    pub(super) metrics: &'a mut Option<Metrics>,
+    /// Static mem-op ids of speculatively hoisted stores / loads
+    /// (SPEC builds; empty otherwise) — summary attribution only.
+    pub(super) spec_store_mems: &'a [u32],
+    pub(super) spec_load_mems: &'a [u32],
     pub(super) stores_committed: u64,
     pub(super) stores_poisoned: u64,
     /// Per static op (dense by mem id): (requests, poisons).
@@ -417,14 +443,27 @@ impl SimCtx<'_> {
     }
 
     fn chan_name(&self, id: usize) -> String {
-        let meta = &self.tbl.metas[id];
-        let an = &self.m.arrays[meta.arr as usize].name;
-        match meta.kind {
-            DChanKind::Req => format!("req(@{an})"),
-            DChanKind::StVal => format!("stval(@{an})"),
-            DChanKind::LdVal => format!("ldval(@{an},m{})", meta.mem),
-            DChanKind::LdValAgu => format!("ldval_agu(@{an},m{})", meta.mem),
-        }
+        chan_name(self.m, self.tbl, id)
+    }
+
+    /// Fold the raw metrics collectors into a [`MetricsSummary`]
+    /// (`None` when metrics are off). Called at run end and when a
+    /// stall diagnostic snapshots the machine.
+    pub(super) fn metrics_summary(&self, units: &[UnitStat]) -> Option<MetricsSummary> {
+        let met = self.metrics.as_ref()?;
+        let unit_instrs: Vec<(String, u64)> =
+            units.iter().map(|u| (u.unit.clone(), u.dyn_instrs)).collect();
+        let env = SummaryEnv {
+            cycles: self.max_t,
+            units: &unit_instrs,
+            chan_names: (0..self.tbl.len()).map(|i| chan_name(self.m, self.tbl, i)).collect(),
+            chan_roles: self.tbl.metas.iter().map(|meta| chan_role(meta.kind)).collect(),
+            array_names: self.m.arrays.iter().map(|a| a.name.clone()).collect(),
+            per_mem: &*self.per_mem,
+            spec_store_mems: self.spec_store_mems,
+            spec_load_mems: self.spec_load_mems,
+        };
+        Some(met.summarize(&env))
     }
 
     /// Snapshot of every non-empty channel, for stall diagnostics.
@@ -452,13 +491,40 @@ impl SimCtx<'_> {
         units: Vec<UnitStat>,
         lsqs: Vec<LsqStat>,
     ) -> anyhow::Error {
+        let metrics = self.metrics_summary(&units);
         anyhow::Error::new(StallDiagnostic {
             reason,
             units,
             channels: self.chan_stats(),
             lsqs,
             max_t: self.max_t,
+            metrics,
         })
+    }
+}
+
+/// Human-readable channel name — shared by stall diagnostics, metrics
+/// summaries and the Perfetto exporter.
+pub(super) fn chan_name(m: &Module, tbl: &ChanTable, id: usize) -> String {
+    let meta = &tbl.metas[id];
+    let an = &m.arrays[meta.arr as usize].name;
+    match meta.kind {
+        DChanKind::Req => format!("req(@{an})"),
+        DChanKind::StVal => format!("stval(@{an})"),
+        DChanKind::LdVal => format!("ldval(@{an},m{})", meta.mem),
+        DChanKind::LdValAgu => format!("ldval_agu(@{an},m{})", meta.mem),
+    }
+}
+
+/// Static producer/consumer unit of each channel kind — lets the
+/// metrics layer attribute blocked cycles per unit without runtime
+/// unit ids.
+pub(super) fn chan_role(kind: DChanKind) -> ChanRole {
+    match kind {
+        DChanKind::Req => ChanRole { producer: "agu", consumer: "du" },
+        DChanKind::StVal => ChanRole { producer: "cu", consumer: "du" },
+        DChanKind::LdVal => ChanRole { producer: "du", consumer: "cu" },
+        DChanKind::LdValAgu => ChanRole { producer: "du", consumer: "agu" },
     }
 }
 
@@ -680,6 +746,9 @@ impl<'a> Unit<'a> {
                         t_issue + 1 + ctx.sta_rd_port_extra(t_issue);
                     let t_done = t_issue + ctx.read_lat(t_issue);
                     ctx.bump(t_done);
+                    if let Some(met) = ctx.metrics.as_mut() {
+                        met.on_load_issue(t_done - t_issue);
+                    }
                     if let Some(tr) = ctx.trace.as_mut() {
                         tr.push("sta", "ld_issue", 0, t_issue);
                     }
@@ -719,7 +788,14 @@ impl<'a> Unit<'a> {
                     let lat = ctx.push_lat(t);
                     let e = Elem { val: get!(idx), poison: false, mem, is_store, t };
                     if !ctx.chans.try_push(chan, e, lat) {
+                        if let Some(met) = ctx.metrics.as_mut() {
+                            met.on_push_blocked(chan);
+                        }
                         return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
+                    }
+                    if let Some(met) = ctx.metrics.as_mut() {
+                        let occ = ctx.chans.len_of(chan);
+                        met.on_push(chan, occ, t, false);
                     }
                     ctx.bump(t);
                     if let Some(tr) = ctx.trace.as_mut() {
@@ -738,9 +814,18 @@ impl<'a> Unit<'a> {
                     // Dataflow pop: stream pops are in-order and (in these
                     // slices) unconditional per iteration, so the circuit
                     // pops ahead of branch resolution — no t_ctrl term.
+                    let preview =
+                        if ctx.metrics.is_some() { ctx.chans.pop_preview(chan) } else { None };
                     let Some((v, _poison, _m, t)) = ctx.chans.pop(chan, 0) else {
                         return Ok(StepOut::Blocked(Wait { chan, needs_pop: false }));
                     };
+                    if let Some(met) = ctx.metrics.as_mut() {
+                        let occ = ctx.chans.len_of(chan);
+                        // consumer wait: how long the unit idled for the
+                        // element to arrive past the pop-rate chain
+                        let (et, lp) = preview.unwrap_or((t, t));
+                        met.on_pop(chan, occ, t, et.saturating_sub(lp + 1));
+                    }
                     let t = t + ctx.fault().map_or(0, |fi| fi.chan_pop_stall(t));
                     ctx.bump(t);
                     if let Some(tr) = ctx.trace.as_mut() {
@@ -753,7 +838,14 @@ impl<'a> Unit<'a> {
                     let lat = ctx.push_lat(t);
                     let e = Elem { val: get!(val), poison: false, mem, is_store: true, t };
                     if !ctx.chans.try_push(chan, e, lat) {
+                        if let Some(met) = ctx.metrics.as_mut() {
+                            met.on_push_blocked(chan);
+                        }
                         return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
+                    }
+                    if let Some(met) = ctx.metrics.as_mut() {
+                        let occ = ctx.chans.len_of(chan);
+                        met.on_push(chan, occ, t, false);
                     }
                     ctx.bump(t);
                     if let Some(tr) = ctx.trace.as_mut() {
@@ -771,7 +863,14 @@ impl<'a> Unit<'a> {
                         let lat = ctx.push_lat(t);
                         let e = Elem { val: Val::I(0), poison: true, mem, is_store: true, t };
                         if !ctx.chans.try_push(chan, e, lat) {
+                            if let Some(met) = ctx.metrics.as_mut() {
+                                met.on_push_blocked(chan);
+                            }
                             return Ok(StepOut::Blocked(Wait { chan, needs_pop: true }));
+                        }
+                        if let Some(met) = ctx.metrics.as_mut() {
+                            let occ = ctx.chans.len_of(chan);
+                            met.on_push(chan, occ, t, true);
                         }
                         if let Some(tr) = ctx.trace.as_mut() {
                             tr.push(self.name, "poison", mem, t);
@@ -846,15 +945,36 @@ fn flush_rob(lsq: &mut Lsq, mem: u32, ctx: &mut SimCtx) {
         if blocked {
             if !lsq.pending.contains(&mem) {
                 lsq.pending.push(mem);
+                if let Some(met) = ctx.metrics.as_mut() {
+                    // count once per parking, not per retry
+                    if let Some(ch) = cu_ch {
+                        if ctx.chans.full(ch) {
+                            met.on_push_blocked(ch);
+                        }
+                    }
+                    if let Some(ch) = agu_ch {
+                        if ctx.chans.full(ch) {
+                            met.on_push_blocked(ch);
+                        }
+                    }
+                }
             }
             return;
         }
         let lat = ctx.push_lat(rt);
         if let Some(ch) = cu_ch {
             ctx.chans.push(ch, Elem { val: rv, poison: false, mem, is_store: false, t: rt }, lat);
+            if let Some(met) = ctx.metrics.as_mut() {
+                let occ = ctx.chans.len_of(ch);
+                met.on_push(ch, occ, rt, false);
+            }
         }
         if let Some(ch) = agu_ch {
             ctx.chans.push(ch, Elem { val: rv, poison: false, mem, is_store: false, t: rt }, lat);
+            if let Some(met) = ctx.metrics.as_mut() {
+                let occ = ctx.chans.len_of(ch);
+                met.on_push(ch, occ, rt, false);
+            }
         }
         lsq.robs[mem as usize].release();
     }
@@ -880,6 +1000,10 @@ pub(super) fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
     // admit everything that has arrived (fault squeezes shrink the
     // effective queue capacities, never below 1)
     while let Some(req) = ctx.chans.pop_elem(lsq.req_ch) {
+        if let Some(met) = ctx.metrics.as_mut() {
+            let occ = ctx.chans.len_of(lsq.req_ch);
+            met.on_pop(lsq.req_ch, occ, req.t, 0);
+        }
         let mut t_enter = req.t.max(lsq.t_enter_last + 1);
         if req.is_store {
             if lsq.store_slots.len() >= ctx.eff_st_q(t_enter) {
@@ -899,6 +1023,9 @@ pub(super) fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
             s
         };
         lsq.window.push_back(WinEntry { req, t_enter, seq });
+        if let Some(met) = ctx.metrics.as_mut() {
+            met.on_admit(lsq.arr, req.is_store, lsq.window.len());
+        }
     }
 
     // process the window
@@ -930,6 +1057,14 @@ pub(super) fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
                     );
                 }
                 let _ = ctx.chans.pop(lsq.stval_ch, 0);
+                if let Some(met) = ctx.metrics.as_mut() {
+                    let occ = ctx.chans.len_of(lsq.stval_ch);
+                    // stval wait = how long the paired request sat in the
+                    // window for its value; the same quantity is the
+                    // decoupling-slack sample (AGU lead over CU)
+                    met.on_pop(lsq.stval_ch, occ, v.t, v.t.saturating_sub(e.t_enter));
+                    met.on_store_pair(lsq.arr, e.req.t, v.t, lsq.window.len());
+                }
                 // DropPoison is the deliberately-injected recovery bug:
                 // the DU "loses" the poison bit and falls through to the
                 // commit path, which the differential fuzz harness must
@@ -942,6 +1077,9 @@ pub(super) fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
                     ctx.stores_poisoned += 1;
                     ctx.per_mem[e.req.mem as usize].1 += 1;
                     ctx.bump(t_resolve);
+                    if let Some(met) = ctx.metrics.as_mut() {
+                        met.on_store_poison(lsq.arr, t_resolve - e.t_enter);
+                    }
                     if let Some(tr) = ctx.trace.as_mut() {
                         tr.push("du", "st_poison", e.req.mem, t_resolve);
                     }
@@ -965,6 +1103,9 @@ pub(super) fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
                     lsq.store_slots.push_back(t_commit);
                     ctx.stores_committed += 1;
                     ctx.bump(t_commit);
+                    if let Some(met) = ctx.metrics.as_mut() {
+                        met.on_store_commit(lsq.arr, t_commit - e.t_enter);
+                    }
                     if let Some(tr) = ctx.trace.as_mut() {
                         tr.push("du", "st_commit", e.req.mem, t_w);
                     }
@@ -998,6 +1139,10 @@ pub(super) fn du_step(lsq: &mut Lsq, ctx: &mut SimCtx) -> Result<()> {
                 lsq.read_port = t_issue + 1;
                 let t_done = t_issue + ctx.read_lat(t_issue);
                 ctx.bump(t_done);
+                if let Some(met) = ctx.metrics.as_mut() {
+                    met.on_load_issue(t_done - t_issue);
+                    met.on_load_done(lsq.arr, t_done - e.t_enter);
+                }
                 if let Some(tr) = ctx.trace.as_mut() {
                     tr.push("du", "ld_issue", e.req.mem, t_issue);
                 }

@@ -90,8 +90,15 @@ pub struct MachineConfig {
     /// Deterministic fault injection (latency spikes, channel jitter,
     /// LSQ squeezes — see [`crate::fault`]). `None` runs clean.
     pub fault: Option<crate::fault::FaultInjector>,
-    /// Record a pipeline trace (Fig. 2 reproduction).
+    /// Record a pipeline trace (Fig. 2 reproduction; also the event
+    /// source of the Chrome/Perfetto exporter — see
+    /// [`crate::metrics::perfetto`]).
     pub trace: bool,
+    /// Collect decoupling telemetry (per-unit/channel/LSQ counters,
+    /// decoupling slack, MLP — see [`crate::metrics`]). Off by
+    /// default; collection is observation-only and never changes
+    /// timing or results (pinned by `rust/tests/metrics.rs`).
+    pub metrics: bool,
 }
 
 impl Default for MachineConfig {
@@ -110,6 +117,7 @@ impl Default for MachineConfig {
             wall_timeout_ms: 0,
             fault: None,
             trace: false,
+            metrics: false,
         }
     }
 }

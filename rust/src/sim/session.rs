@@ -24,8 +24,8 @@
 
 use super::decoded::{ChanTable, DecodedSim};
 use super::machine::{
-    deadline_from, du_step, lsq_bit, lsq_stats, per_mem_map, Channels, Lsq, SimCtx, SimResult,
-    Unit, UnitKind, AGU_BIT, CU_BIT,
+    chan_name, deadline_from, du_step, lsq_bit, lsq_stats, per_mem_map, Channels, Lsq, SimCtx,
+    SimResult, Unit, UnitKind, AGU_BIT, CU_BIT,
 };
 use super::stall::StallReason;
 use super::trace::Trace;
@@ -33,7 +33,9 @@ use super::{MachineConfig, Memory};
 use crate::fault::FaultInjector;
 use crate::ir::types::Val;
 use crate::ir::Module;
+use crate::metrics::{Metrics, MetricsSummary};
 use crate::transform::Compiled;
+use crate::util::Json;
 use anyhow::{bail, Result};
 
 /// Immutable copy of the initial memory image a session restores from
@@ -82,6 +84,8 @@ enum Engine<'c> {
         lsqs: Vec<Lsq>,
         /// Static ids of speculatively hoisted stores (misspec stats).
         spec_mems: Vec<u32>,
+        /// Static ids of speculatively hoisted loads (metrics only).
+        spec_load_mems: Vec<u32>,
     },
 }
 
@@ -105,6 +109,10 @@ pub struct SimSession<'c> {
     per_mem: Vec<(u64, u64)>,
     commit_log: Vec<(u32, i64, Val)>,
     trace: Option<Trace>,
+    /// Raw telemetry collectors (when `cfg.metrics`), reset per run.
+    metrics: Option<Metrics>,
+    /// Folded summary of the most recent successful run.
+    last_metrics: Option<MetricsSummary>,
     last: RunStats,
     ran: bool,
 }
@@ -144,6 +152,7 @@ impl<'c> SimSession<'c> {
                         })
                         .collect(),
                     spec_mems: c.speculated_mems(),
+                    spec_load_mems: c.speculated_load_mems(),
                 }
             }
         };
@@ -158,6 +167,8 @@ impl<'c> SimSession<'c> {
             per_mem: vec![(0, 0); decoded.chans.n_mems()],
             commit_log: Vec::new(),
             trace: None,
+            metrics: cfg.metrics.then(|| Metrics::new(decoded.chans.len(), n_arrays)),
+            last_metrics: None,
             last: RunStats::default(),
             ran: false,
         })
@@ -190,7 +201,19 @@ impl<'c> SimSession<'c> {
             self.trace = None;
         }
         let (module, decoded) = parts(self.c);
-        let stats = run_engine(
+        if self.cfg.metrics {
+            match &mut self.metrics {
+                Some(met) => met.reset(),
+                None => {
+                    self.metrics =
+                        Some(Metrics::new(decoded.chans.len(), module.arrays.len()))
+                }
+            }
+        } else {
+            self.metrics = None;
+        }
+        self.last_metrics = None;
+        let (stats, metrics) = run_engine(
             module,
             &decoded.chans,
             &self.cfg,
@@ -199,10 +222,12 @@ impl<'c> SimSession<'c> {
             &mut self.chans,
             &mut self.memory,
             &mut self.trace,
+            &mut self.metrics,
             &mut self.per_mem,
             &mut self.commit_log,
         )?;
         self.last = stats;
+        self.last_metrics = metrics;
         Ok(stats)
     }
 
@@ -226,6 +251,38 @@ impl<'c> SimSession<'c> {
         self.trace.as_ref()
     }
 
+    /// Raw telemetry collectors of the most recent run (when
+    /// `cfg.metrics`).
+    pub fn metrics(&self) -> Option<&Metrics> {
+        self.metrics.as_ref()
+    }
+
+    /// Folded metrics summary of the most recent successful run.
+    pub fn metrics_summary(&self) -> Option<&MetricsSummary> {
+        self.last_metrics.as_ref()
+    }
+
+    /// Export the most recent run as a Chrome/Perfetto `trace_event`
+    /// document (needs `cfg.trace`; counter tracks additionally need
+    /// `cfg.metrics`). Open the rendered JSON at
+    /// <https://ui.perfetto.dev>. Works after failed runs too — the
+    /// partial trace of whatever executed is exported.
+    pub fn perfetto(&self, label: &str) -> Option<Json> {
+        let tr = self.trace.as_ref()?;
+        let (module, decoded) = parts(self.c);
+        let chan_names: Vec<String> = (0..decoded.chans.len())
+            .map(|i| chan_name(module, &decoded.chans, i))
+            .collect();
+        let array_names: Vec<String> = module.arrays.iter().map(|a| a.name.clone()).collect();
+        Some(crate::metrics::perfetto::export(
+            label,
+            &tr.events,
+            self.metrics.as_ref(),
+            &chan_names,
+            &array_names,
+        ))
+    }
+
     /// Consume the session into the [`SimResult`] of its last run —
     /// moves the memory/trace/commit-log buffers out without copying.
     pub fn into_result(self) -> SimResult {
@@ -240,6 +297,7 @@ impl<'c> SimSession<'c> {
             per_mem: per_mem_map(&self.per_mem),
             trace: self.trace,
             commit_log: self.commit_log,
+            metrics: self.last_metrics,
         }
     }
 }
@@ -258,9 +316,10 @@ fn run_engine(
     chans: &mut Channels,
     memory: &mut Memory,
     trace: &mut Option<Trace>,
+    metrics: &mut Option<Metrics>,
     per_mem: &mut [(u64, u64)],
     commit_log: &mut Vec<(u32, i64, Val)>,
-) -> Result<RunStats> {
+) -> Result<(RunStats, Option<MetricsSummary>)> {
     let mut ctx = SimCtx {
         m,
         tbl,
@@ -269,6 +328,9 @@ fn run_engine(
         memory,
         max_t: 0,
         trace,
+        metrics,
+        spec_store_mems: &[],
+        spec_load_mems: &[],
         stores_committed: 0,
         stores_poisoned: 0,
         per_mem,
@@ -284,16 +346,20 @@ fn run_engine(
                     .stall_error(StallReason::Deadlock, vec![unit.stat()], vec![])
                     .context("STA unit blocked (channel op in monolithic build?)"));
             }
-            Ok(RunStats {
+            let stats = RunStats {
                 cycles: ctx.max_t,
                 dyn_instrs: unit.dyn_instrs,
                 stores_committed: ctx.stores_committed,
                 stores_poisoned: 0,
                 spec_store_reqs: 0,
                 misspec_rate: 0.0,
-            })
+            };
+            let summary = ctx.metrics_summary(&[unit.stat()]);
+            Ok((stats, summary))
         }
-        Engine::Dae { agu, cu, lsqs, spec_mems } => {
+        Engine::Dae { agu, cu, lsqs, spec_mems, spec_load_mems } => {
+            ctx.spec_store_mems = spec_mems.as_slice();
+            ctx.spec_load_mems = spec_load_mems.as_slice();
             agu.reset(args);
             cu.reset(args);
             for lsq in lsqs.iter_mut() {
@@ -400,7 +466,7 @@ fn run_engine(
                 .iter()
                 .map(|&mm| ctx.per_mem.get(mm as usize).map(|x| x.1).unwrap_or(0))
                 .sum();
-            Ok(RunStats {
+            let stats = RunStats {
                 cycles: ctx.max_t,
                 dyn_instrs: agu.dyn_instrs + cu.dyn_instrs,
                 stores_committed: ctx.stores_committed,
@@ -411,7 +477,9 @@ fn run_engine(
                 } else {
                     0.0
                 },
-            })
+            };
+            let summary = ctx.metrics_summary(&[agu.stat(), cu.stat()]);
+            Ok((stats, summary))
         }
     }
 }

@@ -80,6 +80,11 @@ pub struct StallDiagnostic {
     pub lsqs: Vec<LsqStat>,
     /// Latest event timestamp when the stall was detected.
     pub max_t: u64,
+    /// Telemetry snapshot at stall time (when the run had
+    /// `MachineConfig::metrics`): per-unit blocked-cycle attribution
+    /// and channel high-water marks, so the report says *where* the
+    /// machine starved.
+    pub metrics: Option<crate::metrics::MetricsSummary>,
 }
 
 impl StallDiagnostic {
@@ -112,6 +117,26 @@ impl StallDiagnostic {
                 "  lsq  @{:<23} window={:<9} store_slots={:<9} load_slots={}",
                 l.array, l.window, l.store_slots, l.load_slots
             );
+        }
+        if let Some(ms) = &self.metrics {
+            let _ = writeln!(s, "  -- starvation attribution (metrics snapshot) --");
+            for u in &ms.units {
+                let _ = writeln!(
+                    s,
+                    "  unit {:<4} blocked-on-pop={:<10} push-blocks={:<6} busy={}",
+                    u.unit, u.blocked_pop_cycles, u.blocked_push_events, u.busy_instrs
+                );
+                for (chan, cyc) in &u.blocked_by {
+                    let _ = writeln!(s, "       waited {cyc:>10} cycle(s) on {chan}");
+                }
+            }
+            for c in &ms.channels {
+                let _ = writeln!(
+                    s,
+                    "  hwm  {:<24} high-water={:<6} pushes={:<10} pops={}",
+                    c.name, c.hwm, c.pushes, c.pops
+                );
+            }
         }
         s
     }

@@ -1,5 +1,13 @@
 //! Pipeline event traces (Fig. 2 reproduction: decoupled vs.
 //! non-decoupled address-generation timelines).
+//!
+//! Two renderings exist: [`Trace::render`] draws the ASCII timeline
+//! below, and [`crate::metrics::perfetto::export`] (reachable as
+//! `SimSession::perfetto` or `dae-spec profile --perfetto`) converts
+//! the same events into a Chrome/Perfetto `trace_event` JSON document
+//! — one lane per unit, instant events for poisons, plus counter
+//! tracks for channel occupancy and decoupling slack when metrics are
+//! enabled. Open the written file at <https://ui.perfetto.dev>.
 
 #[derive(Clone, Debug)]
 pub struct TraceEvent {

@@ -96,6 +96,22 @@ impl Compiled {
                 .unwrap_or_default(),
         }
     }
+
+    /// Memory-op ids of speculatively hoisted *loads* (§5.4) — the
+    /// metrics layer attributes their request traffic to speculation.
+    pub fn speculated_load_mems(&self) -> Vec<u32> {
+        match self {
+            Compiled::Monolithic { .. } => Vec::new(),
+            Compiled::Dae { map, .. } => map
+                .as_ref()
+                .map(|m| {
+                    m.iter()
+                        .flat_map(|(_, rs)| rs.iter().filter(|r| !r.is_store).map(|r| r.mem))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        }
+    }
 }
 
 /// Compile `(m, f)` — `f` must be `m.funcs[func_idx]` — for `arch`.

@@ -1,0 +1,163 @@
+//! Observability pins: the metrics layer must be timing-neutral
+//! (cycles, memory and commit logs bit-identical with metrics on or
+//! off, on every kernel × arch), deterministic (same seed →
+//! byte-identical `profile --json` and Perfetto documents), and
+//! correctly reset across session reuse — a failed run must not leak
+//! counters into the next one.
+
+use dae_spec::coordinator::build_workload;
+use dae_spec::coordinator::profile::profile_json;
+use dae_spec::fault::{FaultInjector, FaultPlan};
+use dae_spec::metrics::MetricsSummary;
+use dae_spec::sim::{memory_diff, simulate, MachineConfig, SimSession};
+use dae_spec::transform::{build, Arch};
+use dae_spec::workloads::PAPER_KERNELS;
+
+fn kernels() -> Vec<&'static str> {
+    let mut ks: Vec<&str> = PAPER_KERNELS.to_vec();
+    ks.push("nested3");
+    ks
+}
+
+/// The tentpole pin: enabling `MachineConfig::metrics` observes the
+/// machine without perturbing it — every reported number, the final
+/// memory and the commit log are bit-identical to a metrics-off run.
+#[test]
+fn metrics_are_timing_neutral_everywhere() {
+    let off = MachineConfig::default();
+    let on = MachineConfig { metrics: true, ..MachineConfig::default() };
+    for kernel in kernels() {
+        let w = build_workload(kernel, 2026, None).unwrap();
+        for arch in [Arch::Sta, Arch::Dae, Arch::Spec] {
+            let c = build(&w.module, 0, arch).unwrap();
+            let a = simulate(&c, &w.args, w.memory.clone(), &off)
+                .unwrap_or_else(|e| panic!("{kernel}/{arch:?} metrics off: {e:#}"));
+            let b = simulate(&c, &w.args, w.memory.clone(), &on)
+                .unwrap_or_else(|e| panic!("{kernel}/{arch:?} metrics on: {e:#}"));
+            assert_eq!(a.cycles, b.cycles, "{kernel}/{arch:?}: cycles differ");
+            assert_eq!(a.dyn_instrs, b.dyn_instrs, "{kernel}/{arch:?}: dyn_instrs differ");
+            assert_eq!(
+                a.stores_committed, b.stores_committed,
+                "{kernel}/{arch:?}: stores_committed differ"
+            );
+            assert_eq!(
+                a.stores_poisoned, b.stores_poisoned,
+                "{kernel}/{arch:?}: stores_poisoned differ"
+            );
+            assert_eq!(a.misspec_rate, b.misspec_rate, "{kernel}/{arch:?}: misspec_rate");
+            assert_eq!(
+                memory_diff(&a.memory, &b.memory),
+                None,
+                "{kernel}/{arch:?}: memory differs with metrics on"
+            );
+            assert_eq!(a.commit_log, b.commit_log, "{kernel}/{arch:?}: commit log differs");
+            assert!(a.metrics.is_none(), "{kernel}/{arch:?}: metrics off but summary present");
+            let m = b.metrics.as_ref().unwrap_or_else(|| {
+                panic!("{kernel}/{arch:?}: metrics on but no summary")
+            });
+            assert_eq!(m.cycles, b.cycles, "{kernel}/{arch:?}: summary cycle count");
+            let busy: u64 = m.units.iter().map(|u| u.busy_instrs).sum();
+            assert_eq!(busy, b.dyn_instrs, "{kernel}/{arch:?}: per-unit busy vs dyn_instrs");
+        }
+    }
+}
+
+/// Same seed → byte-identical `dae-spec profile --json` document.
+#[test]
+fn profile_json_is_byte_deterministic() {
+    let cfg = MachineConfig::default();
+    let archs = [Arch::Sta, Arch::Dae, Arch::Spec];
+    let a = profile_json("hist", 2026, None, &archs, &cfg).unwrap().render();
+    let b = profile_json("hist", 2026, None, &archs, &cfg).unwrap().render();
+    assert_eq!(a, b, "profile document differs between identical runs");
+    assert!(a.contains("dae-spec-profile/v1"), "schema tag missing");
+    assert!(a.contains("mean_slack"), "slack summary missing");
+}
+
+/// The acceptance probe: on `hist`, SPEC shows real speculation —
+/// nonzero speculated store requests, poisons, poison rate and positive
+/// decoupling slack — while DAE and STA show none of it.
+#[test]
+fn spec_reports_slack_and_poisons_hist() {
+    let cfg = MachineConfig { metrics: true, ..MachineConfig::default() };
+    let w = build_workload("hist", 2026, None).unwrap();
+
+    let run = |arch: Arch| -> MetricsSummary {
+        let c = build(&w.module, 0, arch).unwrap();
+        simulate(&c, &w.args, w.memory.clone(), &cfg)
+            .unwrap_or_else(|e| panic!("hist/{arch:?}: {e:#}"))
+            .metrics
+            .expect("metrics enabled")
+    };
+
+    let spec = run(Arch::Spec);
+    assert!(spec.speculation.spec_store_reqs > 0, "SPEC issued no speculated stores");
+    assert!(spec.speculation.poisons > 0, "hist misspec produced no poisons");
+    assert!(spec.speculation.poison_rate > 0.0, "zero poison rate");
+    assert!(spec.speculation.discarded_cycles > 0, "poisons discarded no residency");
+    assert!(!spec.speculation.per_array.is_empty(), "no per-array poison attribution");
+    assert!(!spec.slack.is_empty(), "no slack pairings recorded");
+    assert!(
+        spec.slack.iter().any(|s| s.mean_slack > 0.0),
+        "SPEC shows no positive decoupling slack: {:?}",
+        spec.slack
+    );
+    assert!(spec.mlp > 0.0, "zero MLP");
+    assert!(!spec.channels.is_empty() && !spec.lsqs.is_empty());
+
+    for arch in [Arch::Sta, Arch::Dae] {
+        let m = run(arch);
+        assert_eq!(m.speculation.spec_store_reqs, 0, "{arch:?} reports speculated stores");
+        assert_eq!(m.speculation.poisons, 0, "{arch:?} reports poisons");
+        assert_eq!(m.speculation.poison_rate, 0.0, "{arch:?} poison rate");
+        assert!(m.mlp > 0.0, "{arch:?}: zero MLP");
+    }
+}
+
+/// Session reuse: counters reset on entry, so a clean run after a
+/// wedged (failed) run reports exactly the same summary as the first
+/// clean run — nothing from the aborted run leaks through.
+#[test]
+fn session_reuse_resets_counters_after_failed_run() {
+    let cfg = MachineConfig { metrics: true, ..MachineConfig::default() };
+    let w = build_workload("hist", 2026, None).unwrap();
+    let c = build(&w.module, 0, Arch::Spec).unwrap();
+    let mut sess = SimSession::new(&c, &cfg, w.memory.clone()).unwrap();
+
+    sess.run(&w.args).unwrap();
+    let first = sess.metrics_summary().cloned().expect("metrics enabled");
+
+    sess.set_fault(Some(FaultInjector::new(FaultPlan::wedge())));
+    assert!(sess.run(&w.args).is_err(), "wedge plan should stall the machine");
+    assert!(
+        sess.metrics_summary().is_none(),
+        "failed run must not publish a summary"
+    );
+
+    sess.set_fault(None);
+    sess.run(&w.args).unwrap();
+    let third = sess.metrics_summary().cloned().expect("metrics enabled");
+    assert_eq!(first, third, "counters leaked across a failed run");
+}
+
+/// Perfetto export is deterministic across sessions and carries the
+/// expected structure: named lanes, counter tracks, poison instants.
+#[test]
+fn perfetto_export_is_deterministic_and_structured() {
+    let cfg = MachineConfig { metrics: true, trace: true, ..MachineConfig::default() };
+    let w = build_workload("hist", 2026, None).unwrap();
+    let c = build(&w.module, 0, Arch::Spec).unwrap();
+
+    let export = || {
+        let mut sess = SimSession::new(&c, &cfg, w.memory.clone()).unwrap();
+        sess.run(&w.args).unwrap();
+        sess.perfetto("hist/SPEC").expect("trace enabled").render()
+    };
+    let a = export();
+    let b = export();
+    assert_eq!(a, b, "perfetto document differs between identical runs");
+    assert!(a.contains("\"thread_name\""), "lane metadata missing");
+    assert!(a.contains("\"ph\": \"C\""), "counter tracks missing");
+    assert!(a.contains("st_poison"), "poison instants missing");
+    assert!(a.contains("slack @"), "slack counter track missing");
+}
